@@ -1,0 +1,37 @@
+"""TPU-adaptation cost: vector-batched PKG (stale-by-<V loads) vs the exact
+sequential scan, across block sizes — quantifies DESIGN.md §2's claim that
+block-staleness costs little imbalance."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core import avg_imbalance_fraction, pkg_partition, pkg_partition_batched
+from repro.core.streams import zipf_stream
+
+BLOCKS = [64, 128, 256, 512, 1024]
+
+
+def run(scale: float = 1.0) -> list[Row]:
+    rows = []
+    m = int(400_000 * scale)
+    keys = zipf_stream(m, 50_000, 1.0, seed=9)
+    ks = jnp.asarray(keys)
+    w = 16
+    a = np.asarray(pkg_partition(ks, w))
+    t0 = time.perf_counter()
+    a = np.asarray(pkg_partition(ks, w))
+    dt = time.perf_counter() - t0
+    exact = avg_imbalance_fraction(a, w)
+    rows.append(Row("batched/exact", dt / m * 1e6, f"{exact:.3e}"))
+    for blk in BLOCKS:
+        ab = np.asarray(pkg_partition_batched(ks, w, block=blk))
+        t0 = time.perf_counter()
+        ab = np.asarray(pkg_partition_batched(ks, w, block=blk))
+        dt = time.perf_counter() - t0
+        frac = avg_imbalance_fraction(ab, w)
+        rows.append(Row(f"batched/V{blk}", dt / m * 1e6, f"{frac:.3e}"))
+    return rows

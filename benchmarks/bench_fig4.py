@@ -1,0 +1,22 @@
+"""Paper Fig 4: average imbalance of H vs PKG-global (G) vs PKG-local (L_S)
+across datasets, workers, and source counts."""
+from __future__ import annotations
+
+from benchmarks.common import Row, imbalance_row, sources_row
+from repro.core.streams import PAPER_DATASETS
+
+WORKERS = [10, 50]
+SOURCES = [5, 10]
+
+
+def run(scale: float = 1.0) -> list[Row]:
+    rows = []
+    for tag in ("WP", "CT", "LN1", "LN2"):
+        spec = PAPER_DATASETS[tag]
+        keys = spec.generate(seed=2, scale=0.01 * scale)
+        for w in WORKERS:
+            rows.append(imbalance_row(f"fig4/{tag}/W{w}/H", "kg", keys, w))
+            rows.append(sources_row(f"fig4/{tag}/W{w}/G", keys, w, 1, "global"))
+            for s in SOURCES:
+                rows.append(sources_row(f"fig4/{tag}/W{w}/L{s}", keys, w, s, "local"))
+    return rows

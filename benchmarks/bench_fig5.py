@@ -1,0 +1,38 @@
+"""Paper Fig 5: imbalance through time for G / L5 / L5P1 (probing every
+"minute" ~ 1% of the stream); derived = avg fraction | max fraction."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core import imbalance_series, simulate_sources
+from repro.core.streams import PAPER_DATASETS
+
+TECHS = [("G", "global", 0), ("L5", "local", 0), ("L5P1", "probe", None)]
+
+
+def run(scale: float = 1.0) -> list[Row]:
+    rows = []
+    for tag in ("WP", "CT"):
+        spec = PAPER_DATASETS[tag]
+        keys = spec.generate(seed=3, scale=0.01 * scale)
+        probe = max(len(keys) // 100, 1)
+        for w in (5, 50):
+            for name, mode, pp in TECHS:
+                t0 = time.perf_counter()
+                a = simulate_sources(
+                    keys, w, 5, mode=mode, probe_period=pp if pp is not None else probe
+                )
+                dt = time.perf_counter() - t0
+                ts, series = imbalance_series(a, w)
+                frac = series / ts  # I(t)/t through time
+                rows.append(
+                    Row(
+                        f"fig5/{tag}/W{w}/{name}",
+                        dt / len(keys) * 1e6,
+                        f"avg={np.mean(frac):.3e}|max={np.max(frac):.3e}",
+                    )
+                )
+    return rows

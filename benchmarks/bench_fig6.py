@@ -1,0 +1,30 @@
+"""Paper Fig 6: % disagreement between local estimation and the global
+oracle (ZF, K=10k, W=5) while both keep good balance."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Row
+from repro.core import avg_imbalance_fraction, disagreement, simulate_sources
+from repro.core.streams import zipf_stream
+
+ZS = [0.4, 0.8, 1.0, 1.2]
+SOURCES = [2, 5, 10]
+
+
+def run(scale: float = 1.0) -> list[Row]:
+    rows = []
+    m = int(200_000 * scale)
+    for z in ZS:
+        keys = zipf_stream(m, 10_000, z, seed=4)
+        g = simulate_sources(keys, 5, 1, mode="global")
+        for s in SOURCES:
+            t0 = time.perf_counter()
+            l = simulate_sources(keys, 5, s, mode="local")
+            dt = time.perf_counter() - t0
+            dis = disagreement(g, l) * 100
+            frac = avg_imbalance_fraction(l, 5)
+            rows.append(
+                Row(f"fig6/z{z}/S{s}", dt / m * 1e6, f"disagree%={dis:.1f}|imb={frac:.2e}")
+            )
+    return rows

@@ -1,0 +1,21 @@
+"""Paper Fig 7: PKG imbalance vs Zipf exponent z, for several key-space sizes
+and worker counts; shows the balanced->unbalanced transition at p1 ~ d/W."""
+from __future__ import annotations
+
+from benchmarks.common import Row, imbalance_row
+from repro.core.streams import zipf_stream
+
+ZS = [0.6, 1.0, 1.4, 1.8]
+KEYS = [10_000, 100_000]
+WORKERS = [5, 50]
+
+
+def run(scale: float = 1.0) -> list[Row]:
+    rows = []
+    m = int(300_000 * scale)
+    for k in KEYS:
+        for z in ZS:
+            keys = zipf_stream(m, k, z, seed=5)
+            for w in WORKERS:
+                rows.append(imbalance_row(f"fig7/K{k}/z{z}/W{w}", "pkg", keys, w))
+    return rows

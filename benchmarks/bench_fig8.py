@@ -1,0 +1,27 @@
+"""Paper Fig 8: skewed splitting of keys onto sources (LJ-like edge streams:
+sources keyed by src vertex / KG, workers keyed by dst vertex) vs uniform
+shuffle onto sources."""
+from __future__ import annotations
+
+from benchmarks.common import Row, sources_row
+from repro.core.streams import graph_edge_stream
+
+SOURCES = [5, 10, 20]
+WORKERS = [5, 10, 20]
+
+
+def run(scale: float = 1.0) -> list[Row]:
+    rows = []
+    m = int(300_000 * scale)
+    src, dst = graph_edge_stream(m, 50_000, 200_000, seed=6)
+    for s in SOURCES:
+        for w in WORKERS:
+            rows.append(
+                sources_row(f"fig8/uniform/S{s}/W{w}", dst, w, s, "local")
+            )
+            rows.append(
+                sources_row(
+                    f"fig8/skewed/S{s}/W{w}", dst, w, s, "local", source_keys=src
+                )
+            )
+    return rows

@@ -1,0 +1,19 @@
+"""Paper Fig 9: number of choices d vs imbalance under extreme skew
+(ZF z=1.2): d=2 fails, growing d restores balance at memory cost d*K."""
+from __future__ import annotations
+
+from benchmarks.common import Row, imbalance_row
+from repro.core.streams import zipf_stream
+
+DS = [2, 3, 4, 6, 9, 15]
+WORKERS = [5, 40, 100]
+
+
+def run(scale: float = 1.0) -> list[Row]:
+    rows = []
+    m = int(300_000 * scale)
+    keys = zipf_stream(m, 100_000, 1.2, seed=7)
+    for w in WORKERS:
+        for d in DS:
+            rows.append(imbalance_row(f"fig9/W{w}/d{d}", "pkg", keys, w, d=d))
+    return rows

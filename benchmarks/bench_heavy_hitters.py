@@ -1,0 +1,45 @@
+"""Paper §4.2: heavy hitters via per-worker SPACESAVING + mergeable summaries.
+
+Measures top-20 recall and the summed worst-case estimate-error bound under
+KG / SG / PKG: PKG gets SG-level balance while a key's estimate merges ≤2
+summaries (vs W for SG), so its error bound tracks the sequential case.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core import hash_partition, pkg_partition, shuffle_partition
+from repro.core.applications import distributed_heavy_hitters
+from repro.core.streams import zipf_stream
+
+W, CAP, TOP = 8, 256, 20
+
+
+def run(scale: float = 1.0) -> list[Row]:
+    rows = []
+    m = int(400_000 * scale)
+    keys = zipf_stream(m, 50_000, 1.1, seed=11)
+    true = np.bincount(keys, minlength=50_000)
+    true_top = set(np.argsort(-true)[:TOP])
+    ks = jnp.asarray(keys)
+    for name, assign in [
+        ("KG", hash_partition(ks, W)),
+        ("SG", shuffle_partition(ks, W)),
+        ("PKG", pkg_partition(ks, W)),
+    ]:
+        t0 = time.perf_counter()
+        topk, err, loads = distributed_heavy_hitters(keys, np.asarray(assign), W, CAP, TOP)
+        dt = time.perf_counter() - t0
+        recall = len({k for k, _ in topk} & true_top) / TOP
+        imb = (loads.max() - loads.mean()) / m
+        rows.append(
+            Row(
+                f"hh/{name}", dt / m * 1e6,
+                f"recall@{TOP}={recall:.2f}|err_bound={err}|imbalance={imb:.2e}",
+            )
+        )
+    return rows

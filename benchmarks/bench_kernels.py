@@ -1,0 +1,69 @@
+"""Kernel microbench: wall time of the jitted XLA oracle paths (the CPU
+production path; Pallas interpret mode is a correctness tool, not a timing
+target) + one interpret-mode run per kernel as a sanity check."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row
+from repro.core.streams import zipf_stream
+from repro.kernels import ref
+
+
+def _time(fn, *args, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(scale: float = 1.0) -> list[Row]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # pkg_route oracle (jitted scan)
+    n = max(int(131_072 * scale) // 1024, 2) * 1024  # chunk-divisible
+    keys = jnp.asarray(zipf_stream(n, 10_000, 1.1, seed=1))
+    f = jax.jit(lambda k: ref.ref_pkg_route(k, 32, chunk=1024, block=128))
+    dt = _time(f, keys)
+    rows.append(Row("kernel/pkg_route_ref", dt / len(keys) * 1e6, f"keys={len(keys)}"))
+
+    # moe dispatch oracle
+    T = max(int(16_384 * scale) // 512, 1) * 512
+    E, k = 64, 8
+    probs = jax.nn.softmax(jax.random.normal(key, (T, E)), -1)
+    tv, ti = jax.lax.top_k(probs, 2 * k)
+    cand = ti.reshape(-1, k, 2).astype(jnp.int32)
+    cg = tv.reshape(-1, k, 2)
+    f = jax.jit(lambda c, g: ref.ref_moe_pkg_dispatch(c, g, E, block=256))
+    dt = _time(f, cand, cg)
+    rows.append(Row("kernel/moe_dispatch_ref", dt / cand.shape[0] * 1e6, f"T={cand.shape[0]}"))
+
+    # flash attention oracle vs naive full-logits timing
+    B, S, H, hd = 1, int(1024 * max(scale, 0.25)), 8, 64
+    q = jax.random.normal(key, (B, S, H, hd), jnp.bfloat16)
+    kk = jax.random.normal(key, (B, S, 2, hd), jnp.bfloat16)
+    vv = jax.random.normal(key, (B, S, 2, hd), jnp.bfloat16)
+    f = jax.jit(lambda a, b, c: ref.ref_flash_attention(a, b, c))
+    dt = _time(f, q, kk, vv)
+    rows.append(Row("kernel/attention_ref", dt / S * 1e6, f"S={S}"))
+
+    # rmsnorm
+    x = jax.random.normal(key, (4096, 2048), jnp.bfloat16)
+    w = jax.random.normal(key, (2048,)) * 0.1
+    f = jax.jit(lambda a, b: ref.ref_rmsnorm(a, b))
+    dt = _time(f, x, w)
+    rows.append(Row("kernel/rmsnorm_ref", dt / 4096 * 1e6, "rows=4096"))
+
+    # interpret-mode sanity (correctness path exists end-to-end)
+    from repro.kernels.rmsnorm import rmsnorm
+
+    dt = _time(lambda a, b: rmsnorm(a, b), x[:256], w, reps=1)
+    rows.append(Row("kernel/rmsnorm_pallas_interpret", dt / 256 * 1e6, "rows=256"))
+    return rows

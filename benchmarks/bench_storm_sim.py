@@ -1,0 +1,72 @@
+"""Paper Fig 10 + Table 3: throughput / latency / memory of the word-count
+topology under the M/D/1 queue model (core.storm_sim), WP-matched stream.
+
+  fig10a: saturation throughput vs CPU delay for KG / SG / PKG
+  table3: mean latency at 90% of SG's saturation rate
+  fig10b: throughput vs memory for aggregation periods T (PKG vs SG vs KG)
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core import (
+    QueueModel,
+    aggregation_memory,
+    hash_partition,
+    pkg_partition,
+    shuffle_partition,
+)
+from repro.core.streams import matched_trace_stream
+
+DELAYS_MS = [0.1, 0.4, 1.0]
+AGG_PERIODS = [10, 30, 60]  # "seconds" at 10k msgs/s -> window in messages
+W = 8
+
+
+def run(scale: float = 1.0) -> list[Row]:
+    rows = []
+    m = int(220_000 * scale)
+    keys = matched_trace_stream(m, int(29_000 * scale), 0.0932, seed=8)
+    ks = jnp.asarray(keys)
+    assigns = {
+        "KG": np.asarray(hash_partition(ks, W)),
+        "SG": np.asarray(shuffle_partition(ks, W)),
+        "PKG": np.asarray(pkg_partition(ks, W)),
+    }
+    t0 = time.perf_counter()
+    us = (time.perf_counter() - t0) / m * 1e6
+
+    for d_ms in DELAYS_MS:
+        models = {k: QueueModel(a, W, d_ms / 1e3) for k, a in assigns.items()}
+        for name, qm in models.items():
+            rows.append(
+                Row(
+                    f"fig10a/D{d_ms}ms/{name}", us,
+                    f"sat_msgs_per_s={qm.saturation_throughput:.0f}",
+                )
+            )
+        # Table 3: latency at 90% of SG saturation
+        rate = 0.9 * models["SG"].saturation_throughput
+        for name, qm in models.items():
+            lat = qm.mean_latency(rate)
+            rows.append(
+                Row(
+                    f"table3/D{d_ms}ms/{name}", us,
+                    f"latency_ms={lat*1e3:.2f}" if np.isfinite(lat) else "latency_ms=inf",
+                )
+            )
+
+    # fig10b: memory (live partial counters per worker) per aggregation period
+    for T in AGG_PERIODS:
+        window = T * 10_000  # 10k msgs/s emulated input rate
+        for name, a in assigns.items():
+            if name == "KG":
+                mem = aggregation_memory(keys, a, W, window=len(keys))
+            else:
+                mem = aggregation_memory(keys, a, W, window=window)
+            rows.append(Row(f"fig10b/T{T}s/{name}", us, f"counters_per_worker={mem:.0f}"))
+    return rows

@@ -1,0 +1,34 @@
+"""Paper Table 2: fraction of average imbalance for H / PoTC / On-Greedy /
+Off-Greedy / PKG on WP- and TW-matched streams, W in {5,10,50,100}.
+
+Streams are scaled (messages AND keys by the same factor) so the m/K ratio
+and p1 match the originals; Theorem 5.1 makes the imbalance *fraction*
+scale-free in this regime.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Row, imbalance_row
+from repro.core.streams import matched_trace_stream
+
+# (tag, n_msgs, n_keys, p1) at scale=1.0 — 1% of the original sizes
+DATASETS = [
+    ("WP", 220_000, 29_000, 0.0932),
+    ("TW", 1_200_000, 31_000, 0.0267),
+]
+METHODS = ["kg", "potc", "on_greedy", "off_greedy", "pkg"]
+WORKERS = [5, 10, 50, 100]
+
+
+def run(scale: float = 1.0) -> list[Row]:
+    rows = []
+    for tag, m, k, p1 in DATASETS:
+        keys = matched_trace_stream(int(m * scale), int(k * scale), p1, seed=1)
+        for w in WORKERS:
+            for meth in METHODS:
+                rows.append(
+                    imbalance_row(
+                        f"table2/{tag}/W{w}/{meth}", meth, keys, w,
+                        n_keys=int(k * scale),
+                    )
+                )
+    return rows

@@ -1,0 +1,33 @@
+"""Theorem 5.1 empirics: I(m)·n/m across n for Greedy-1 vs Greedy-2 on the
+paper's tight-case distribution (uniform over 5n keys, p1 = 1/(5n) ≤ 1/(5n)).
+
+d=2 keeps I(m)·n/m = O(1); d=1 grows ~ln n/ln ln n — the exponential gap of
+the power of two choices, in the m >> n² regime the theorem addresses.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core import pkg_partition, uniform_stream
+
+NS = [8, 16, 32, 64]
+
+
+def run(scale: float = 1.0) -> list[Row]:
+    rows = []
+    for n in NS:
+        m = max(int(40 * n * n * scale), 20_000)
+        keys = uniform_stream(m, 5 * n, seed=n)
+        ks = jnp.asarray(keys)
+        for d in (1, 2):
+            t0 = time.perf_counter()
+            a = np.asarray(pkg_partition(ks, n, d=d, seed=n))
+            dt = time.perf_counter() - t0
+            loads = np.bincount(a, minlength=n)
+            norm = (loads.max() - loads.mean()) * n / m  # I(m)·n/m
+            rows.append(Row(f"theory/n{n}/d{d}", dt / m * 1e6, f"In_over_m={norm:.3f}"))
+    return rows

@@ -1,0 +1,85 @@
+"""Shared benchmark helpers: timed partitioner runs + row collection.
+
+Every bench module exposes run(scale: float) -> list[Row]; run.py prints
+``name,us_per_call,derived`` CSV (us_per_call = wall time per routed message,
+derived = the paper's metric for that table/figure).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    PARTITIONERS,
+    avg_imbalance_fraction,
+    hash_partition,
+    off_greedy_partition,
+    on_greedy_partition,
+    pkg_partition,
+    pkg_partition_batched,
+    potc_static_partition,
+    shuffle_partition,
+    simulate_sources,
+)
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.4f},{self.derived}"
+
+
+def route(method: str, keys: np.ndarray, n_workers: int, n_keys: Optional[int] = None,
+          d: int = 2, seed: int = 0) -> tuple[np.ndarray, float]:
+    """Run a partitioner; returns (assignment, seconds). JIT warm-up excluded."""
+    ks = jnp.asarray(keys, jnp.int32)
+    n_keys = int(n_keys or (int(keys.max()) + 1))
+
+    def call():
+        if method == "kg":
+            return hash_partition(ks, n_workers, seed=seed)
+        if method == "sg":
+            return shuffle_partition(ks, n_workers)
+        if method == "pkg":
+            return pkg_partition(ks, n_workers, d=d, seed=seed)
+        if method == "pkg_batched":
+            return pkg_partition_batched(ks, n_workers, d=d, seed=seed)
+        if method == "potc":
+            return potc_static_partition(ks, n_workers, n_keys, d=d, seed=seed)
+        if method == "on_greedy":
+            return on_greedy_partition(ks, n_workers, n_keys)
+        if method == "off_greedy":
+            return off_greedy_partition(ks, n_workers, n_keys)
+        raise ValueError(method)
+
+    a = np.asarray(call())  # warm-up/compile
+    t0 = time.perf_counter()
+    a = np.asarray(call())
+    dt = time.perf_counter() - t0
+    return a, dt
+
+
+def imbalance_row(tag: str, method: str, keys: np.ndarray, n_workers: int,
+                  n_keys: Optional[int] = None, d: int = 2) -> Row:
+    a, dt = route(method, keys, n_workers, n_keys=n_keys, d=d)
+    frac = avg_imbalance_fraction(a, n_workers)
+    return Row(tag, dt / len(keys) * 1e6, f"{frac:.3e}")
+
+
+def sources_row(tag: str, keys: np.ndarray, n_workers: int, n_sources: int,
+                mode: str, probe_period: int = 0,
+                source_keys: Optional[np.ndarray] = None) -> Row:
+    t0 = time.perf_counter()
+    a = simulate_sources(keys, n_workers, n_sources, mode=mode,
+                         probe_period=probe_period, source_keys=source_keys)
+    dt = time.perf_counter() - t0
+    frac = avg_imbalance_fraction(a, n_workers)
+    return Row(tag, dt / len(keys) * 1e6, f"{frac:.3e}")

@@ -1,0 +1,69 @@
+"""Benchmark harness: one module per paper table/figure (+ beyond-paper).
+
+Prints ``name,us_per_call,derived`` CSV.  --scale scales stream sizes
+(default 0.25 for CI speed; 1.0 ~ 1% of the paper's stream sizes with
+matched m/K ratios and p1; --scale 100 approaches the original sizes).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (
+    bench_batched_fidelity,
+    bench_heavy_hitters,
+    bench_fig4,
+    bench_fig5,
+    bench_fig6,
+    bench_fig7,
+    bench_fig8,
+    bench_fig9,
+    bench_kernels,
+    bench_moe_balance,
+    bench_storm_sim,
+    bench_table2,
+    bench_theory,
+)
+
+MODULES = [
+    ("table2", bench_table2),
+    ("fig4", bench_fig4),
+    ("fig5", bench_fig5),
+    ("fig6", bench_fig6),
+    ("fig7", bench_fig7),
+    ("fig8", bench_fig8),
+    ("fig9", bench_fig9),
+    ("storm_sim", bench_storm_sim),
+    ("theory", bench_theory),
+    ("heavy_hitters", bench_heavy_hitters),
+    ("moe_balance", bench_moe_balance),
+    ("batched_fidelity", bench_batched_fidelity),
+    ("kernels", bench_kernels),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.25)
+    ap.add_argument("--only", default=None, help="comma-separated module names")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    for name, mod in MODULES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            rows = mod.run(scale=args.scale)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+            continue
+        for row in rows:
+            print(row.csv(), flush=True)
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr, flush=True)
+
+
+if __name__ == "__main__":
+    main()

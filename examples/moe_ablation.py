@@ -1,0 +1,65 @@
+"""Ablation: PKG-PoTC MoE routing vs vanilla top-k + aux loss, end to end.
+
+Trains two tiny mixtral-family models (identical init/data) and reports loss
+curves and per-expert load spread — the paper's balance guarantee as a
+drop-in MoE router.
+
+  PYTHONPATH=src python examples/moe_ablation.py [--steps 60]
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import TrainConfig, get_config, make_tiny
+from repro.data import PKGDataPipeline, SyntheticCorpus
+from repro.models import init_params
+from repro.models.moe import expert_load_stats, route
+from repro.optim import adamw_init
+from repro.train import make_train_step
+
+
+def run(router: str, steps: int):
+    cfg = dataclasses.replace(make_tiny(get_config("mixtral-8x7b")), router=router)
+    tcfg = TrainConfig(learning_rate=2e-3, total_steps=steps, warmup_steps=5)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    pipe = PKGDataPipeline(
+        batch_size=8, seq_len=64, vocab_size=cfg.vocab_size,
+        corpus=SyntheticCorpus(cfg.vocab_size, n_keys=256, seed=7), seed=7,
+    )
+    step = jax.jit(make_train_step(cfg, tcfg))
+    losses = []
+    batch = None
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(pipe).items()}
+        params, opt, m = step(params, opt, batch, jnp.int32(i))
+        losses.append(float(m["loss"]))
+    # final expert balance on a fresh batch
+    x = jax.random.normal(jax.random.PRNGKey(1), (2048, cfg.d_model))
+    # use the first MoE layer's router weights
+    layer = jax.tree_util.tree_map(lambda a: a[0], params["superblocks"][0])
+    idx, _, _ = route(layer["mlp"], x, cfg)
+    _, maxload = expert_load_stats(idx, cfg.n_experts)
+    return losses, float(maxload)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    args = ap.parse_args()
+    print(f"{'router':10s} {'loss[0:5]':>10s} {'loss[-5:]':>10s} {'max/mean expert load':>22s}")
+    for router in ("topk_aux", "pkg_potc"):
+        losses, maxload = run(router, args.steps)
+        print(
+            f"{router:10s} {np.mean(losses[:5]):10.4f} {np.mean(losses[-5:]):10.4f} "
+            f"{maxload:22.2f}"
+        )
+    print("\nPKG-PoTC: comparable loss, structurally bounded expert load,")
+    print("no auxiliary loss term to tune.")
+
+
+if __name__ == "__main__":
+    main()

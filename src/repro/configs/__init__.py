@@ -1,0 +1,69 @@
+"""Arch registry: importing this package registers all assigned architectures."""
+import dataclasses
+
+from repro.configs.base import (
+    ARCH_REGISTRY,
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    TrainConfig,
+    get_config,
+    register,
+)
+
+# one module per assigned architecture (registration side effect)
+from repro.configs import (  # noqa: F401
+    chameleon_34b,
+    deepseek_67b,
+    gemma3_4b,
+    h2o_danube_1_8b,
+    mamba2_1_3b,
+    mixtral_8x7b,
+    musicgen_medium,
+    olmoe_1b_7b,
+    qwen2_5_3b,
+    recurrentgemma_2b,
+)
+
+ALL_ARCHS = tuple(sorted(ARCH_REGISTRY))
+
+# long_500k requires sub-quadratic attention / bounded state (DESIGN.md §5):
+LONG_CONTEXT_ARCHS = frozenset(
+    {"gemma3-4b", "h2o-danube-1.8b", "recurrentgemma-2b", "mixtral-8x7b", "mamba2-1.3b"}
+)
+
+
+def shapes_for(arch: str):
+    """The assigned shape cells for an arch (skips long_500k when quadratic)."""
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if arch in LONG_CONTEXT_ARCHS:
+        names.append("long_500k")
+    return [SHAPES[n] for n in names]
+
+
+def make_tiny(cfg: ModelConfig, seq_len: int = 64) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests (per-arch, see spec f)."""
+    pat = cfg.attn_pattern
+    n_layers = 2 * len(pat) + (1 if cfg.n_remainder else 0)
+    kv = max(1, (4 * cfg.n_kv_heads) // max(cfg.n_heads, 1)) if cfg.n_kv_heads else 0
+    return dataclasses.replace(
+        cfg,
+        name=f"tiny-{cfg.name}",
+        n_layers=n_layers,
+        d_model=64,
+        n_heads=4 if cfg.n_heads else 0,
+        n_kv_heads=kv,
+        head_dim=16 if cfg.n_heads else 0,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=512,
+        window=min(cfg.window, 32) if cfg.window else 0,
+        rnn_width=64 if cfg.rnn_width else 0,
+        ssm_state=16 if cfg.ssm_state else 0,
+        ssm_headdim=16 if cfg.ssm_state else 64,
+        ssm_chunk=16,
+        n_experts=8 if cfg.n_experts else 0,
+        top_k=min(cfg.top_k, 2) if cfg.top_k else 0,
+        pkg_block=16,
+        attn_q_block=32,
+        vocab_pad_multiple=16,
+    )

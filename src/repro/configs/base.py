@@ -1,0 +1,172 @@
+"""Model / train / mesh configuration dataclasses and the arch registry."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+__all__ = ["ModelConfig", "TrainConfig", "ShapeConfig", "SHAPES", "register", "get_config", "ARCH_REGISTRY"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    # layer pattern: cycle of {"global","local","rglru","ssd"}
+    attn_pattern: Tuple[str, ...] = ("global",)
+    window: int = 0  # sliding window for "local" layers
+    rope_base_local: float = 10_000.0
+    rope_base_global: float = 10_000.0
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    logit_softcap: float = 0.0
+    mlp: str = "swiglu"  # swiglu | geglu
+    tie_embeddings: bool = True
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    router: str = "topk_aux"  # topk_aux | pkg_potc
+    capacity_factor: float = 1.25
+    aux_loss_coef: float = 0.01
+    pkg_block: int = 256  # token block for PKG-PoTC batch-greedy routing
+    # SSM (mamba2)
+    ssm_expand: int = 2
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_ngroups: int = 1
+    ssm_chunk: int = 256
+    conv_width: int = 4
+    # RG-LRU (recurrentgemma)
+    rnn_width: int = 0
+    # IO frontend
+    frontend: str = "tokens"  # tokens | audio_stub (precomputed embeddings)
+    n_io_heads: int = 1  # musicgen: 4 codebook output heads
+    # numerics / compute
+    attn_q_block: int = 512  # q-chunk for memory-bounded attention
+    vocab_pad_multiple: int = 256
+    # scan-over-superblocks (compact HLO) vs unrolled layers (exact
+    # cost_analysis — XLA counts loop bodies once; see launch/dryrun.py)
+    scan_layers: bool = True
+
+    @property
+    def vocab_padded(self) -> int:
+        m = self.vocab_pad_multiple
+        return ((self.vocab_size + m - 1) // m) * m
+
+    @property
+    def d_inner(self) -> int:  # mamba2 inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim if self.ssm_state else 0
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        p = self.attn_pattern
+        return tuple(p[i % len(p)] for i in range(self.n_layers))
+
+    @property
+    def n_superblocks(self) -> int:
+        if not self.scan_layers:
+            return 0
+        return self.n_layers // len(self.attn_pattern)
+
+    @property
+    def n_remainder(self) -> int:
+        return self.n_layers - self.n_superblocks * len(self.attn_pattern)
+
+    def param_count(self) -> int:
+        """Total parameters N (for MODEL_FLOPS = 6*N*D roofline)."""
+        return _param_count(self, active_only=False)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top_k experts count)."""
+        return _param_count(self, active_only=True)
+
+
+def _param_count(cfg: ModelConfig, active_only: bool) -> int:
+    d, hd = cfg.d_model, cfg.head_dim
+    n = cfg.vocab_padded * d  # embed
+    if not cfg.tie_embeddings:
+        n += cfg.vocab_padded * d * cfg.n_io_heads
+    per_layer = {}
+    for kind in set(cfg.layer_kinds()):
+        if kind in ("global", "local"):
+            attn = d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd + cfg.n_heads * hd * d
+        elif kind == "rglru":
+            w = cfg.rnn_width
+            attn = 2 * d * w + w * cfg.conv_width + 2 * w * w + w * d  # in-proj x2, conv, gates, out
+        elif kind == "ssd":
+            di, g, s, h = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_heads
+            attn = d * (2 * di + 2 * g * s + h) + (di + 2 * g * s) * cfg.conv_width + di * d + h * 2
+        else:
+            raise ValueError(kind)
+        if kind == "ssd":
+            ffn = 0
+        elif cfg.n_experts:
+            e = cfg.top_k if active_only else cfg.n_experts
+            ffn = e * 3 * d * cfg.d_ff + d * cfg.n_experts  # experts + router
+        else:
+            ffn = 3 * d * cfg.d_ff
+        per_layer[kind] = attn + ffn + 2 * d  # + norms
+    return n + sum(per_layer[k] for k in cfg.layer_kinds())
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+    microbatches: int = 1  # gradient accumulation steps (train only)
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4_096, 256, microbatches=1),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524_288, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    z_loss: float = 1e-4
+    schedule: str = "cosine"  # cosine | linear | const
+    microbatches: int = 1
+    remat: bool = True
+    grad_compression: str = "none"  # none | int8_ef (explicit-DP path)
+    checkpoint_every: int = 100
+    keep_checkpoints: int = 3
+    seed: int = 0
+
+
+ARCH_REGISTRY: dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    ARCH_REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    # import registers all arch modules on first use
+    from repro import configs as _c  # noqa: F401
+
+    if name not in ARCH_REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCH_REGISTRY)}")
+    return ARCH_REGISTRY[name]

@@ -1,0 +1,26 @@
+"""chameleon-34b [vlm]: 48L d=8192 64H (GQA kv=8) d_ff=22016 vocab=65536.
+
+Early-fusion multimodal: VQ image tokens and text share one 65536 vocab, so
+the backbone is a plain decoder over token ids (the VQ-VAE tokenizer is a
+stub per the assignment — image inputs arrive as token ids).  qk-norm per the
+paper for training stability. [arXiv:2405.09818]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="chameleon-34b",
+        family="vlm",
+        n_layers=48,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=22016,
+        vocab_size=65536,
+        attn_pattern=("global",),
+        qk_norm=True,
+        mlp="swiglu",
+        tie_embeddings=False,
+    )
+)

@@ -1,0 +1,24 @@
+"""deepseek-67b [dense]: 95L d=8192 64H (GQA kv=8) d_ff=22016 vocab=102400.
+
+llama-architecture (pre-norm RMSNorm, SwiGLU, RoPE), untied embeddings.
+[arXiv:2401.02954]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="deepseek-67b",
+        family="dense",
+        n_layers=95,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=22016,
+        vocab_size=102400,
+        attn_pattern=("global",),
+        rope_base_global=10_000.0,
+        mlp="swiglu",
+        tie_embeddings=False,
+    )
+)

@@ -1,0 +1,28 @@
+"""gemma3-4b [dense]: 34L d=2560 8H (GQA kv=4) d_ff=10240 vocab=262144.
+
+5:1 local:global attention interleave, SWA window 1024 on local layers,
+RoPE base 10k local / 1M global, qk-norm, GeGLU, tied embeddings, hd=256.
+[hf:google/gemma-3-*-pt]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="gemma3-4b",
+        family="dense",
+        n_layers=34,
+        d_model=2560,
+        n_heads=8,
+        n_kv_heads=4,
+        head_dim=256,
+        d_ff=10240,
+        vocab_size=262144,
+        attn_pattern=("local", "local", "local", "local", "local", "global"),
+        window=1024,
+        rope_base_local=10_000.0,
+        rope_base_global=1_000_000.0,
+        qk_norm=True,
+        mlp="geglu",
+        tie_embeddings=True,
+    )
+)

@@ -1,0 +1,25 @@
+"""h2o-danube-1.8b [dense]: 24L d=2560 32H (GQA kv=8) d_ff=6912 vocab=32000.
+
+llama + mistral mix: sliding-window attention (4096) on every layer, SwiGLU.
+hd = 80 (d_model / n_heads). [arXiv:2401.16818]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="h2o-danube-1.8b",
+        family="dense",
+        n_layers=24,
+        d_model=2560,
+        n_heads=32,
+        n_kv_heads=8,
+        head_dim=80,
+        d_ff=6912,
+        vocab_size=32000,
+        attn_pattern=("local",),
+        window=4096,
+        rope_base_local=10_000.0,
+        mlp="swiglu",
+        tie_embeddings=False,
+    )
+)

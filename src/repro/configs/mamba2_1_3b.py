@@ -1,0 +1,29 @@
+"""mamba2-1.3b [ssm]: 48L d=2048, attention-free SSD, vocab=50280.
+
+State-space duality blocks: d_inner = 2*2048, headdim 64 (64 SSD heads),
+d_state 128, 1 group, conv width 4; no MLP (block is gated internally).
+vocab padded to 50432 for 16-way TP. [arXiv:2405.21060]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="mamba2-1.3b",
+        family="ssm",
+        n_layers=48,
+        d_model=2048,
+        n_heads=0,
+        n_kv_heads=0,
+        head_dim=0,
+        d_ff=0,
+        vocab_size=50280,
+        attn_pattern=("ssd",),
+        ssm_expand=2,
+        ssm_state=128,
+        ssm_headdim=64,
+        ssm_ngroups=1,
+        ssm_chunk=256,
+        conv_width=4,
+        tie_embeddings=True,
+    )
+)

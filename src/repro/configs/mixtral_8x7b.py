@@ -1,0 +1,30 @@
+"""mixtral-8x7b [moe]: 32L d=4096 32H (GQA kv=8) d_ff=14336/expert vocab=32000.
+
+8 experts top-2 — the exact two-choice shape of the paper; PKG-PoTC routing
+(router="pkg_potc") is a drop-in replacement for aux-loss balancing here.
+Sliding-window attention 4096. [arXiv:2401.04088]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="mixtral-8x7b",
+        family="moe",
+        n_layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=14336,
+        vocab_size=32000,
+        attn_pattern=("local",),
+        window=4096,
+        rope_base_local=1_000_000.0,
+        mlp="swiglu",
+        tie_embeddings=False,
+        n_experts=8,
+        top_k=2,
+        router="topk_aux",
+        capacity_factor=1.25,
+    )
+)

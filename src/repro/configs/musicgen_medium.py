@@ -1,0 +1,27 @@
+"""musicgen-medium [audio]: 48L d=1536 24H (MHA kv=24) d_ff=6144 vocab=2048.
+
+Decoder-only over EnCodec tokens (4 codebooks, delay pattern). The EnCodec
+frontend is a STUB per the assignment: input_specs() provides precomputed
+frame embeddings (B,S,d); the model adds 4 codebook output heads.
+[arXiv:2306.05284]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="musicgen-medium",
+        family="audio",
+        n_layers=48,
+        d_model=1536,
+        n_heads=24,
+        n_kv_heads=24,
+        head_dim=64,
+        d_ff=6144,
+        vocab_size=2048,
+        attn_pattern=("global",),
+        mlp="geglu",
+        tie_embeddings=False,
+        frontend="audio_stub",
+        n_io_heads=4,
+    )
+)

@@ -1,0 +1,29 @@
+"""olmoe-1b-7b [moe]: 16L d=2048 16H (MHA kv=16) d_ff=1024/expert vocab=50304.
+
+64 experts, top-8 routing, qk-norm, full attention, SwiGLU experts.
+PKG-PoTC routing selectable (router="pkg_potc") — see DESIGN.md §3.2.
+[arXiv:2409.02060]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="olmoe-1b-7b",
+        family="moe",
+        n_layers=16,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        head_dim=128,
+        d_ff=1024,
+        vocab_size=50304,
+        attn_pattern=("global",),
+        qk_norm=True,
+        mlp="swiglu",
+        tie_embeddings=False,
+        n_experts=64,
+        top_k=8,
+        router="topk_aux",
+        capacity_factor=1.25,
+    )
+)

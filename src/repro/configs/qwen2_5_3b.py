@@ -1,0 +1,24 @@
+"""qwen2.5-3b [dense]: 36L d=2048 16H (GQA kv=2) d_ff=11008 vocab=151936.
+
+Full attention, QKV bias, SwiGLU, tied embeddings. [hf:Qwen/Qwen2.5-3B]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="qwen2.5-3b",
+        family="dense",
+        n_layers=36,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=2,
+        head_dim=128,
+        d_ff=11008,
+        vocab_size=151936,
+        attn_pattern=("global",),
+        rope_base_global=1_000_000.0,
+        qkv_bias=True,
+        mlp="swiglu",
+        tie_embeddings=True,
+    )
+)

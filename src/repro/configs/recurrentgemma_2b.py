@@ -1,0 +1,27 @@
+"""recurrentgemma-2b [hybrid]: 26L d=2560 10H (MQA kv=1) d_ff=7680 vocab=256000.
+
+Griffin architecture: RG-LRU + local attention in a 2:1 pattern
+(rglru, rglru, local-attn), window 2048, rnn width 2560, GeGLU, hd=256.
+[arXiv:2402.19427]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="recurrentgemma-2b",
+        family="hybrid",
+        n_layers=26,
+        d_model=2560,
+        n_heads=10,
+        n_kv_heads=1,
+        head_dim=256,
+        d_ff=7680,
+        vocab_size=256000,
+        attn_pattern=("rglru", "rglru", "local"),
+        window=2048,
+        rope_base_local=10_000.0,
+        rnn_width=2560,
+        mlp="geglu",
+        tie_embeddings=True,
+    )
+)

@@ -1,0 +1,44 @@
+"""Core PKG library: the paper's contribution as composable JAX modules."""
+from repro.core.hashing import hash_choices, splitmix32, derive_seeds
+from repro.core.partitioners import (
+    PARTITIONERS,
+    hash_partition,
+    off_greedy_partition,
+    on_greedy_partition,
+    pkg_partition,
+    pkg_partition_batched,
+    potc_static_partition,
+    shuffle_partition,
+)
+from repro.core.estimation import (
+    local_imbalance_bound,
+    simulate_sources,
+    source_assignment,
+)
+from repro.core.metrics import (
+    avg_imbalance_fraction,
+    disagreement,
+    final_imbalance_fraction,
+    imbalance,
+    imbalance_series,
+    keys_per_worker,
+    loads_from_assignment,
+)
+from repro.core.streams import (
+    PAPER_DATASETS,
+    StreamSpec,
+    drift_stream,
+    graph_edge_stream,
+    lognormal_stream,
+    matched_trace_stream,
+    uniform_stream,
+    zipf_probs,
+    zipf_stream,
+)
+from repro.core.storm_sim import (
+    QueueModel,
+    aggregation_memory,
+    aggregation_message_overhead,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

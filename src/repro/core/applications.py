@@ -1,0 +1,141 @@
+"""The paper's §4 applications on top of PKG.
+
+Heavy hitters (§4.2): SPACESAVING summaries per worker, merged downstream.
+The Berinde et al. bound makes the estimation error grow with the number of
+merged summaries — W for shuffle grouping but only 2 for PKG (key splitting),
+while KG gets single-summary error at the price of load imbalance.
+
+Streaming naïve Bayes (§2, running example): per-(word,class) counters.
+Counters are a monoid, so PKG's two partial counts per word merge into the
+exact totals — same model as sequential, with balanced workers and ≤2×K
+counter state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional
+
+import numpy as np
+
+__all__ = ["SpaceSaving", "distributed_heavy_hitters", "StreamingNaiveBayes"]
+
+
+class SpaceSaving:
+    """Metwally et al. SPACESAVING: top-k frequencies in O(capacity) space."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self.counts: dict[int, int] = {}
+        self.errors: dict[int, int] = {}
+
+    def offer(self, key: int, weight: int = 1) -> None:
+        c = self.counts
+        if key in c:
+            c[key] += weight
+            return
+        if len(c) < self.capacity:
+            c[key] = weight
+            self.errors[key] = 0
+            return
+        victim = min(c, key=c.get)  # type: ignore[arg-type]
+        base = c.pop(victim)
+        self.errors.pop(victim)
+        c[key] = base + weight
+        self.errors[key] = base
+
+    def offer_many(self, keys: Iterable[int]) -> None:
+        for k in keys:
+            self.offer(int(k))
+
+    def estimate(self, key: int) -> int:
+        return self.counts.get(key, 0)
+
+    def max_error(self) -> int:
+        """Upper bound on any estimate's error (min counter when full)."""
+        if len(self.counts) < self.capacity:
+            return 0
+        return min(self.counts.values())
+
+    def merge(self, other: "SpaceSaving") -> "SpaceSaving":
+        """Mergeable-summaries merge (Berinde et al.): sum estimates, keep top."""
+        out = SpaceSaving(self.capacity)
+        keys = set(self.counts) | set(other.counts)
+        merged = {
+            k: self.estimate(k) + other.estimate(k) for k in keys
+        }
+        err = {
+            k: self.errors.get(k, self.max_error())
+            + other.errors.get(k, other.max_error())
+            for k in keys
+        }
+        top = sorted(merged, key=merged.get, reverse=True)[: self.capacity]  # type: ignore[arg-type]
+        out.counts = {k: merged[k] for k in top}
+        out.errors = {k: err[k] for k in top}
+        return out
+
+    def top_k(self, k: int) -> list[tuple[int, int]]:
+        return sorted(self.counts.items(), key=lambda kv: -kv[1])[:k]
+
+
+def distributed_heavy_hitters(
+    keys: np.ndarray,
+    assign: np.ndarray,
+    n_workers: int,
+    capacity: int,
+    top: int = 20,
+) -> tuple[list[tuple[int, int]], int, np.ndarray]:
+    """Run per-worker SPACESAVING under a partitioning; merge; return
+    (top-k list, summed max-error bound, per-worker message loads)."""
+    workers = [SpaceSaving(capacity) for _ in range(n_workers)]
+    order = np.argsort(assign, kind="stable")
+    sorted_assign = assign[order]
+    sorted_keys = keys[order]
+    bounds = np.searchsorted(sorted_assign, np.arange(n_workers + 1))
+    for w in range(n_workers):
+        workers[w].offer_many(sorted_keys[bounds[w] : bounds[w + 1]])
+    merged = workers[0]
+    for w in workers[1:]:
+        merged = merged.merge(w)
+    err = sum(w.max_error() for w in workers)
+    loads = np.bincount(assign, minlength=n_workers)
+    return merged.top_k(top), err, loads
+
+
+@dataclasses.dataclass
+class StreamingNaiveBayes:
+    """Multinomial NB over (word, class) counters — the paper's running example.
+
+    Counters live on whichever workers the partitioner chose; `merge_counts`
+    folds the ≤d partial counts per word into the exact totals (monoid).
+    """
+
+    n_classes: int
+    alpha: float = 1.0
+
+    def __post_init__(self):
+        self.word_class: dict[tuple[int, int], int] = {}
+        self.class_counts = np.zeros(self.n_classes, dtype=np.int64)
+
+    def observe(self, words: np.ndarray, label: int) -> None:
+        for w in words:
+            key = (int(w), label)
+            self.word_class[key] = self.word_class.get(key, 0) + 1
+        self.class_counts[label] += len(words)
+
+    def merge_counts(self, other: "StreamingNaiveBayes") -> None:
+        for key, v in other.word_class.items():
+            self.word_class[key] = self.word_class.get(key, 0) + v
+        self.class_counts += other.class_counts
+
+    def predict(self, words: np.ndarray, vocab_size: int) -> int:
+        tot = self.class_counts.astype(np.float64)
+        logp = np.log((tot + 1.0) / (tot.sum() + self.n_classes))
+        denom = np.log(tot + self.alpha * vocab_size)
+        for w in words:
+            for c in range(self.n_classes):
+                num = self.word_class.get((int(w), c), 0) + self.alpha
+                logp[c] += np.log(num) - denom[c]
+        return int(np.argmax(logp))
+
+    def n_counters(self) -> int:
+        return len(self.word_class)

@@ -1,0 +1,54 @@
+"""Stateless hash family for PKG's d choices.
+
+The paper uses 64-bit Murmur hashing; the algorithm only needs d independent,
+uniform hash functions K -> [n].  On TPU we stay in 32-bit lanes (VPU-native)
+and use a SplitMix32-style finalizer over (key ^ per-choice-seed), which passes
+the avalanche tests that matter for choice independence.  The hash family is
+orthogonal to the algorithm (DESIGN.md SS2).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["splitmix32", "hash_choices", "derive_seeds"]
+
+_M1 = np.uint32(0x7FEB352D)
+_M2 = np.uint32(0x846CA68B)
+_GOLDEN = np.uint32(0x9E3779B9)
+
+
+def splitmix32(x: jnp.ndarray) -> jnp.ndarray:
+    """SplitMix32 finalizer. x must be uint32; full avalanche mixing."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * _M1
+    x = x ^ (x >> 15)
+    x = x * _M2
+    x = x ^ (x >> 16)
+    return x
+
+
+def derive_seeds(seed: int, d: int) -> jnp.ndarray:
+    """d decorrelated per-choice seeds from one integer seed."""
+    base = np.uint32((int(seed) * 0x9E3779B9 + 0x9E3779B9) & 0xFFFFFFFF)
+    with np.errstate(over="ignore"):
+        seeds = (np.arange(1, d + 1, dtype=np.uint32) * _GOLDEN) ^ base
+    # one extra scramble round so consecutive seeds differ in high bits too
+    s = seeds
+    s = s ^ (s >> 16)
+    s = s * _M1
+    s = s ^ (s >> 15)
+    return jnp.asarray(s, dtype=jnp.uint32)
+
+
+def hash_choices(keys: jnp.ndarray, n_workers: int, d: int, seed: int = 0) -> jnp.ndarray:
+    """Map keys (...,) -> candidate workers (..., d), each in [0, n_workers).
+
+    Uses independent mixing per choice; modulo bias is negligible for
+    n_workers << 2**32 (worst case 100 workers -> bias < 3e-8).
+    """
+    seeds = derive_seeds(seed, d)  # (d,)
+    k = keys.astype(jnp.uint32)[..., None]  # (..., 1)
+    h = splitmix32(k ^ seeds)  # (..., d)
+    return (h % jnp.uint32(n_workers)).astype(jnp.int32)

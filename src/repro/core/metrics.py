@@ -1,0 +1,77 @@
+"""Imbalance metrics (paper SS2).
+
+I(t) = max_i L_i(t) - avg_i L_i(t).
+The headline number in Tables 2 / Figs 4-9 is the *fraction of average
+imbalance*: mean over sampled checkpoints of I(t), normalized by the total
+number of messages m.
+
+Metrics operate on assignment arrays (m,) so they are partitioner-agnostic;
+computed in numpy (host side, post-hoc over simulated streams).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "loads_from_assignment",
+    "imbalance",
+    "imbalance_series",
+    "avg_imbalance_fraction",
+    "final_imbalance_fraction",
+    "keys_per_worker",
+    "disagreement",
+]
+
+
+def loads_from_assignment(assign: np.ndarray, n_workers: int,
+                          weights: np.ndarray | None = None) -> np.ndarray:
+    return np.bincount(assign, weights=weights, minlength=n_workers).astype(np.float64)
+
+
+def imbalance(loads: np.ndarray) -> float:
+    """I(t) = max - avg."""
+    return float(loads.max() - loads.mean())
+
+
+def imbalance_series(
+    assign: np.ndarray, n_workers: int, n_checkpoints: int = 100
+) -> tuple[np.ndarray, np.ndarray]:
+    """I(t) sampled at n_checkpoints points; returns (ts, I(ts))."""
+    m = len(assign)
+    ts = np.unique(np.linspace(m // n_checkpoints, m, n_checkpoints).astype(np.int64))
+    loads = np.zeros(n_workers, dtype=np.int64)
+    out = np.empty(len(ts), dtype=np.float64)
+    prev = 0
+    for i, t in enumerate(ts):
+        loads += np.bincount(assign[prev:t], minlength=n_workers)
+        prev = t
+        out[i] = loads.max() - loads.mean()
+    return ts, out
+
+
+def avg_imbalance_fraction(
+    assign: np.ndarray, n_workers: int, n_checkpoints: int = 100
+) -> float:
+    """Mean_t I(t) / m -- the number reported in paper Table 2 / Fig 4."""
+    m = len(assign)
+    _, series = imbalance_series(assign, n_workers, n_checkpoints)
+    return float(series.mean() / m)
+
+
+def final_imbalance_fraction(assign: np.ndarray, n_workers: int) -> float:
+    """I(m) / m."""
+    return imbalance(loads_from_assignment(assign, n_workers)) / len(assign)
+
+
+def keys_per_worker(keys: np.ndarray, assign: np.ndarray, n_workers: int) -> np.ndarray:
+    """Distinct keys held per worker == memory footprint of stateful operators.
+
+    KG gives sum == K; SG tends to W*K; PKG <= 2K (key splitting).
+    """
+    pairs = np.unique(np.stack([assign.astype(np.int64), keys.astype(np.int64)]), axis=1)
+    return np.bincount(pairs[0], minlength=n_workers)
+
+
+def disagreement(a: np.ndarray, b: np.ndarray) -> float:
+    """Fraction of messages routed differently by two strategies (Fig 6)."""
+    return float(np.mean(a != b))

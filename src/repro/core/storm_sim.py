@@ -1,0 +1,89 @@
+"""Queueing-model simulator for the paper's Storm deployment (Fig 10, Table 3).
+
+The paper measures throughput/latency/memory of a top-k word-count topology on
+a real Storm cluster.  Offline we model each worker as an M/D/1 queue with
+deterministic per-message service time D (the paper's injected "CPU delay"):
+
+  saturation throughput  T_sat = 1 / (D * max_i f_i)          [msgs/s]
+  mean latency at rate r L(r)  = sum_i f_i * (D + rho_i*D / (2*(1-rho_i)))
+                           with rho_i = r * f_i * D  (Pollaczek-Khinchine)
+
+where f_i is worker i's share of messages under a given partitioner -- the
+quantity PKG optimizes.  Memory is counted exactly (not modeled): the number
+of live (worker, key) partial counters, flushed every aggregation period T
+(PKG/SG) or held forever (KG), measured on the simulated stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["QueueModel", "aggregation_memory", "aggregation_message_overhead"]
+
+
+@dataclasses.dataclass
+class QueueModel:
+    assign: np.ndarray  # (m,) worker per message
+    n_workers: int
+    service_delay_s: float  # D, per-message CPU time at a worker
+
+    def __post_init__(self):
+        loads = np.bincount(self.assign, minlength=self.n_workers).astype(np.float64)
+        self.fractions = loads / loads.sum()
+
+    @property
+    def saturation_throughput(self) -> float:
+        """Max sustainable msgs/s: the hottest worker saturates first."""
+        return 1.0 / (self.service_delay_s * self.fractions.max())
+
+    def mean_latency(self, rate: float) -> float:
+        """Mean per-message latency (queueing + service) at input rate msgs/s.
+
+        Returns inf when the hottest worker is over capacity.
+        """
+        rho = rate * self.fractions * self.service_delay_s
+        if (rho >= 1.0).any():
+            return float("inf")
+        wait = rho * self.service_delay_s / (2.0 * (1.0 - rho))
+        per_worker = self.service_delay_s + wait
+        return float((self.fractions * per_worker).sum())
+
+
+def aggregation_memory(
+    keys: np.ndarray,
+    assign: np.ndarray,
+    n_workers: int,
+    window: int,
+) -> float:
+    """Mean live partial counters per worker with aggregation every `window` msgs.
+
+    PKG/SG flush partial (worker,key) counters downstream each period; KG holds
+    one counter per key forever (window = len(keys) reproduces KG's footprint).
+    """
+    m = len(keys)
+    window = max(1, min(window, m))
+    totals = []
+    for lo in range(0, m, window):
+        hi = min(lo + window, m)
+        pairs = np.stack(
+            [assign[lo:hi].astype(np.int64), keys[lo:hi].astype(np.int64)]
+        )
+        totals.append(np.unique(pairs, axis=1).shape[1])
+    return float(np.mean(totals) / n_workers)
+
+
+def aggregation_message_overhead(
+    keys: np.ndarray, assign: np.ndarray, n_workers: int, window: int
+) -> float:
+    """Extra downstream messages per input message due to periodic flushes."""
+    m = len(keys)
+    window = max(1, min(window, m))
+    total = 0
+    for lo in range(0, m, window):
+        hi = min(lo + window, m)
+        pairs = np.stack(
+            [assign[lo:hi].astype(np.int64), keys[lo:hi].astype(np.int64)]
+        )
+        total += np.unique(pairs, axis=1).shape[1]
+    return total / m

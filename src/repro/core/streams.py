@@ -1,0 +1,180 @@
+"""Synthetic and trace-like key streams matching the paper's datasets (Table 1).
+
+Real traces (Wikipedia page visits, Twitter words, cashtags, LiveJournal edges)
+are not redistributable offline; we generate statistically-matched streams:
+same key-space size, head probability p1, and drift/source-skew structure.
+The paper's own synthetic workloads (Zipf ZF, lognormal LN1/LN2) are exact.
+
+All generators are numpy-based (host-side data plane) and return int32 arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+__all__ = [
+    "zipf_probs",
+    "zipf_stream",
+    "lognormal_stream",
+    "matched_trace_stream",
+    "drift_stream",
+    "graph_edge_stream",
+    "uniform_stream",
+    "StreamSpec",
+    "PAPER_DATASETS",
+]
+
+
+def zipf_probs(n_keys: int, z: float) -> np.ndarray:
+    """Zipf pmf over ranks 1..n_keys with exponent z (paper eq. in SS6.1)."""
+    ranks = np.arange(1, n_keys + 1, dtype=np.float64)
+    w = ranks ** (-z)
+    return w / w.sum()
+
+
+def _sample_from_probs(probs: np.ndarray, n_msgs: int, rng: np.random.Generator) -> np.ndarray:
+    """Inverse-CDF sampling; keys are ranks ordered by decreasing probability."""
+    cdf = np.cumsum(probs)
+    cdf[-1] = 1.0
+    u = rng.random(n_msgs)
+    return np.searchsorted(cdf, u, side="right").astype(np.int32)
+
+
+def zipf_stream(n_msgs: int, n_keys: int, z: float, seed: int = 0) -> np.ndarray:
+    """ZF workload: m iid samples from Zipf(z) over n_keys ranks."""
+    rng = np.random.default_rng(seed)
+    return _sample_from_probs(zipf_probs(n_keys, z), n_msgs, rng)
+
+
+def lognormal_stream(
+    n_msgs: int, n_keys: int, mu: float, sigma: float, seed: int = 0
+) -> np.ndarray:
+    """LN workload: key popularities drawn from lognormal(mu, sigma), then m samples.
+
+    Paper parameters (from an Orkut analysis): LN1 mu=1.789, sigma=2.366 (K=16k);
+    LN2 mu=2.245, sigma=1.133 (K=1.1k).
+    """
+    rng = np.random.default_rng(seed)
+    pops = rng.lognormal(mean=mu, sigma=sigma, size=n_keys)
+    pops = np.sort(pops)[::-1]
+    probs = pops / pops.sum()
+    return _sample_from_probs(probs, n_msgs, rng)
+
+
+def _solve_zipf_for_p1(n_keys: int, p1: float) -> float:
+    """Find z such that the Zipf head probability equals p1 (bisection)."""
+    lo, hi = 0.0, 6.0
+    for _ in range(80):
+        mid = 0.5 * (lo + hi)
+        if zipf_probs(n_keys, mid)[0] < p1:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)
+
+
+def matched_trace_stream(
+    n_msgs: int, n_keys: int, p1: float, seed: int = 0
+) -> np.ndarray:
+    """Trace emulation with a given key-space size and head probability p1.
+
+    Used for WP (K=2.9M, p1=9.32%) and TW (K=31M, p1=2.67%) at reduced message
+    counts; the imbalance *fraction* is scale-free in m for the regimes the
+    paper studies (Thm 5.1: imbalance is Theta(m/n)).
+    """
+    z = _solve_zipf_for_p1(n_keys, p1)
+    return zipf_stream(n_msgs, n_keys, z, seed=seed)
+
+
+def drift_stream(
+    n_msgs: int,
+    n_keys: int,
+    z: float,
+    n_epochs: int = 8,
+    rotate_top: int = 32,
+    seed: int = 0,
+) -> np.ndarray:
+    """CT-style drifting skew: the identity of the hottest keys rotates per epoch.
+
+    Emulates Fig. 3 of the paper (weekly cashtag popularity shifts): within each
+    epoch the stream is Zipf(z), but the rank->key mapping of the top
+    `rotate_top` keys is re-permuted every epoch.
+    """
+    rng = np.random.default_rng(seed)
+    per = n_msgs // n_epochs
+    out = np.empty(n_msgs, dtype=np.int32)
+    base = np.arange(n_keys, dtype=np.int32)
+    probs = zipf_probs(n_keys, z)
+    for e in range(n_epochs):
+        mapping = base.copy()
+        top = rng.permutation(n_keys)[:rotate_top].astype(np.int32)
+        mapping[:rotate_top] = top
+        lo = e * per
+        hi = n_msgs if e == n_epochs - 1 else (e + 1) * per
+        ranks = _sample_from_probs(probs, hi - lo, rng)
+        out[lo:hi] = mapping[ranks]
+    return out
+
+
+def graph_edge_stream(
+    n_msgs: int,
+    n_src_keys: int,
+    n_dst_keys: int,
+    z_out: float = 0.6,
+    z_in: float = 0.55,
+    seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """LJ/SL-style edge stream: (src_key, dst_key) pairs with power-law degrees.
+
+    Default exponents match LiveJournal's head mass (p1 ~ 0.3%, Table 1);
+    heavier tails push past the p1 <= d/W balanceability bound of §5.
+
+    The paper's Fig. 8 setup: source PEs are keyed (KG) by src vertex
+    (projecting the out-degree skew onto sources) and messages to workers are
+    keyed by dst vertex (in-degree skew onto workers).
+    Returns (src_keys, dst_keys), both (n_msgs,) int32.
+    """
+    rng = np.random.default_rng(seed)
+    src = _sample_from_probs(zipf_probs(n_src_keys, z_out), n_msgs, rng)
+    dst = _sample_from_probs(zipf_probs(n_dst_keys, z_in), n_msgs, np.random.default_rng(seed + 1))
+    return src, dst
+
+
+def uniform_stream(n_msgs: int, n_keys: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, n_keys, size=n_msgs, dtype=np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    """A named workload (paper Table 1), scaled for offline simulation."""
+
+    name: str
+    n_msgs: int
+    n_keys: int
+    p1: Optional[float] = None  # matched-trace head probability
+    z: Optional[float] = None  # zipf exponent
+    mu: Optional[float] = None  # lognormal
+    sigma: Optional[float] = None
+
+    def generate(self, seed: int = 0, scale: float = 1.0) -> np.ndarray:
+        m = max(int(self.n_msgs * scale), 1000)
+        if self.p1 is not None:
+            return matched_trace_stream(m, self.n_keys, self.p1, seed=seed)
+        if self.z is not None:
+            return zipf_stream(m, self.n_keys, self.z, seed=seed)
+        assert self.mu is not None and self.sigma is not None
+        return lognormal_stream(m, self.n_keys, self.mu, self.sigma, seed=seed)
+
+
+# Paper Table 1, messages scaled down by default (see DESIGN.md SS9.4);
+# n_keys and p1 preserved exactly.
+PAPER_DATASETS = {
+    "WP": StreamSpec("WP", n_msgs=22_000_000, n_keys=2_900_000, p1=0.0932),
+    "TW": StreamSpec("TW", n_msgs=1_200_000_000, n_keys=31_000_000, p1=0.0267),
+    "CT": StreamSpec("CT", n_msgs=690_000, n_keys=2_900, p1=0.0329),
+    "LN1": StreamSpec("LN1", n_msgs=10_000_000, n_keys=16_000, mu=1.789, sigma=2.366),
+    "LN2": StreamSpec("LN2", n_msgs=10_000_000, n_keys=1_100, mu=2.245, sigma=1.133),
+}

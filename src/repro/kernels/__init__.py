@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot-spots (pl.pallas_call + BlockSpec),
+with jnp oracles in ref.py and jit'd wrappers in ops.py.  On CPU they run in
+interpret mode (correctness); on TPU they compile natively."""
+from repro.kernels import ref
+from repro.kernels.ops import (
+    flash_attention,
+    interpret_mode,
+    moe_pkg_dispatch,
+    pkg_route,
+    rmsnorm,
+)

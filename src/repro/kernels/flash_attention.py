@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: blockwise online-softmax attention (FlashAttention).
+
+Forward-only (serving/prefill path; training uses the q-chunked XLA oracle in
+models/layers.py).  Supports causal masking, sliding windows, and GQA (the kv
+head for q-head h is h // (H/Kv), resolved in the BlockSpec index maps).
+
+Grid (B, H, nQ, nK): the innermost kv dimension accumulates into VMEM scratch
+(acc (BQ,hd) fp32, running max m and sum l (BQ,1)); the output block is
+finalized at the last kv step.  Fully-masked kv blocks are skipped via
+pl.when on the block indices (causal: j_lo > q_hi; window: j_hi < q_lo - w).
+
+MXU alignment: BQ = BK = 128 defaults; hd is padded by the compiler when not
+a multiple of 128 (e.g. danube's hd=80).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, bq, bk, n_k_blocks, causal, window, scale, seq_off):
+    i = pl.program_id(2)  # q block
+    j = pl.program_id(3)  # kv block
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # block-level positions: q rows are offset by seq_off (q covers the last
+    # S positions of the T keys)
+    q_lo = i * bq + seq_off
+    q_hi = q_lo + bq - 1
+    j_lo = j * bk
+    j_hi = j_lo + bk - 1
+    live = True
+    if causal:
+        live = j_lo <= q_hi
+    if window > 0:
+        live = jnp.logical_and(live, j_hi > q_lo - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)  # (BQ, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (BK, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (BQ, BK)
+        q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = j_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window > 0:
+            mask &= k_pos > (q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]  # (BQ,1)
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(j == n_k_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "bq", "bk", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: int = 0,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+):
+    """q (B,S,H,hd), k/v (B,T,Kv,hd) -> (B,S,H,hd).
+
+    S and T must divide by bq / bk.  q positions are aligned to the *end* of
+    the key range (q row s has absolute position s + T - S).
+    """
+    B, S, H, hd = q.shape
+    T, Kv = k.shape[1], k.shape[2]
+    assert S % bq == 0 and T % bk == 0, (S, T, bq, bk)
+    G = H // Kv
+    grid = (B, H, S // bq, T // bk)
+    kern = functools.partial(
+        _kernel,
+        bq=bq,
+        bk=bk,
+        n_k_blocks=T // bk,
+        causal=causal,
+        window=window,
+        scale=hd ** -0.5,
+        seq_off=T - S,
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out

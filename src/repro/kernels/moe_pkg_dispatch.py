@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: fused PKG-PoTC expert choice for MoE dispatch.
+
+Grid: one program per block of T_blk tokens; TPU grid steps run sequentially
+on a core, so the (1, E) fp32 expert-load vector persists in VMEM scratch
+across blocks — a single running local estimator, exactly the semantics of
+models.moe._pkg_choose (intra-block-stale loads, paper §3.2).
+
+Per block, for each of the k slots every token has 2 candidate experts (its
+next-two router-ranked experts): candidate loads are fetched with a one-hot
+matmul, the lane-wise argmin picks the less-loaded candidate, and the block
+histogram updates the load vector — no gathers or scatters.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(cand_ref, gate_ref, idx_ref, gsel_ref, loads_ref, *, n_experts):
+    blk, k, _ = cand_ref.shape
+    eid = jnp.arange(n_experts, dtype=jnp.int32)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        loads_ref[...] = jnp.zeros_like(loads_ref)
+
+    loads = loads_ref[0]  # (E,) f32
+    cand = cand_ref[...]  # (blk, k, 2)
+    gate = gate_ref[...]
+    onehot_c = (cand[..., None] == eid).astype(jnp.float32)  # (blk,k,2,E)
+    lc = jax.lax.dot_general(
+        onehot_c.reshape(blk * k * 2, n_experts),
+        loads.reshape(n_experts, 1),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(blk, k, 2)
+    sel = jnp.argmin(lc, axis=-1)  # ties -> first (higher-gate) candidate
+    idx = jnp.take_along_axis(cand, sel[..., None], axis=-1)[..., 0]
+    gsel = jnp.take_along_axis(gate, sel[..., None], axis=-1)[..., 0]
+    idx_ref[...] = idx
+    gsel_ref[...] = gsel
+    hist = (idx.reshape(-1)[:, None] == eid).astype(jnp.float32).sum(axis=0)
+    loads_ref[0] = loads + hist
+
+
+@functools.partial(jax.jit, static_argnames=("n_experts", "block", "interpret"))
+def moe_pkg_dispatch(
+    cand: jnp.ndarray,
+    cgate: jnp.ndarray,
+    n_experts: int,
+    block: int = 256,
+    interpret: bool = True,
+):
+    """cand (T,k,2) int32, cgate (T,k,2) f32 -> (idx (T,k), gates (T,k), loads (E,)).
+
+    T must divide by block.
+    """
+    T, k, _ = cand.shape
+    assert T % block == 0, (T, block)
+    grid = (T // block,)
+    kern = functools.partial(_kernel, n_experts=n_experts)
+    idx, gsel, loads = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, k, 2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block, k, 2), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, k), lambda i: (i, 0)),
+            pl.BlockSpec((block, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, n_experts), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, k), jnp.int32),
+            jax.ShapeDtypeStruct((T, k), cgate.dtype),
+            jax.ShapeDtypeStruct((1, n_experts), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cand.astype(jnp.int32), cgate)
+    return idx, gsel, loads[0]

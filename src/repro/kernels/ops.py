@@ -1,0 +1,21 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) kernels execute in interpret mode; on TPU the same
+calls compile natively.  `use_kernels()` is the production switch consulted
+by higher layers.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.moe_pkg_dispatch import moe_pkg_dispatch
+from repro.kernels.pkg_route import pkg_route
+from repro.kernels.rmsnorm import rmsnorm
+
+__all__ = ["flash_attention", "moe_pkg_dispatch", "pkg_route", "rmsnorm", "interpret_mode"]
+
+
+def interpret_mode() -> bool:
+    """True when Pallas must run in interpret mode (non-TPU backends)."""
+    return jax.default_backend() != "tpu"

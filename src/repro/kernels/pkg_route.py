@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: PKG stream router (batch-greedy Greedy-d).
+
+Grid: one program per chunk of C keys.  Each program is an independent
+local load estimator (paper §3.2): its (1, n_workers) fp32 load vector lives
+in VMEM scratch and starts at zero.  Inside, keys are processed in vector
+blocks of V lanes:
+
+  hash   : SplitMix32 over (key ^ seed_j) per choice j        (VPU int ops)
+  lookup : one-hot(cand) @ loads                              (MXU matmul)
+  choose : lane-wise argmin over d candidates
+  update : loads += ones @ one-hot(choice)                    (MXU matmul)
+
+Gathers/scatters are avoided entirely — candidate load lookup and the
+histogram update are both expressed as one-hot matmuls, which is the
+TPU-native formulation (DESIGN.md §2, §7).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.hashing import derive_seeds, splitmix32
+
+
+def _kernel(keys_ref, seeds_ref, assign_ref, loads_ref, *, n_workers, d, block):
+    chunk = keys_ref.shape[0]
+    nblk = chunk // block
+    seeds = seeds_ref[...]  # (d,) uint32
+    wid = jnp.arange(n_workers, dtype=jnp.int32)
+
+    def body(i, loads):  # loads (1, n_workers) f32
+        kb = keys_ref[pl.ds(i * block, block)].astype(jnp.uint32)  # (V,)
+        h = splitmix32(kb[:, None] ^ seeds[None, :])  # (V, d)
+        cand = (h % jnp.uint32(n_workers)).astype(jnp.int32)  # (V, d)
+        onehot_c = (cand[..., None] == wid).astype(jnp.float32)  # (V, d, n)
+        lc = jax.lax.dot_general(
+            onehot_c.reshape(block * d, n_workers),
+            loads.reshape(n_workers, 1),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).reshape(block, d)
+        sel = jnp.argmin(lc, axis=-1)  # (V,)
+        choice = jnp.take_along_axis(cand, sel[:, None], axis=-1)[:, 0]
+        assign_ref[pl.ds(i * block, block)] = choice
+        hist = (choice[:, None] == wid).astype(jnp.float32).sum(axis=0)
+        return loads + hist[None, :]
+
+    loads = lax.fori_loop(0, nblk, body, jnp.zeros((1, n_workers), jnp.float32))
+    loads_ref[...] = loads
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_workers", "d", "seed", "chunk", "block", "interpret")
+)
+def pkg_route(
+    keys: jnp.ndarray,
+    n_workers: int,
+    d: int = 2,
+    seed: int = 0,
+    chunk: int = 1024,
+    block: int = 128,
+    interpret: bool = True,
+):
+    """Route keys (N,) int32 -> (assign (N,), per-chunk loads (N/chunk, n)).
+
+    N must divide by chunk; chunk by block.  interpret=True on CPU.
+    """
+    N = keys.shape[0]
+    assert N % chunk == 0 and chunk % block == 0, (N, chunk, block)
+    grid = (N // chunk,)
+    kern = functools.partial(_kernel, n_workers=n_workers, d=d, block=block)
+    assign, loads = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec((1, n_workers), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N,), jnp.int32),
+            jax.ShapeDtypeStruct((N // chunk, n_workers), jnp.float32),
+        ],
+        interpret=interpret,
+    )(keys.astype(jnp.int32), derive_seeds(seed, d))
+    return assign, loads

@@ -1,0 +1,96 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+Each `ref_*` mirrors the kernel contract exactly, including tie-breaking
+(argmin -> first candidate) and block-staleness semantics of the PKG routers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.hashing import hash_choices
+
+
+def ref_pkg_route(keys, n_workers: int, d: int = 2, seed: int = 0,
+                  chunk: int = 1024, block: int = 128):
+    """Chunked batch-greedy PKG (matches kernels/pkg_route.py).
+
+    Chunks are independent local estimators; within a chunk, loads update
+    every `block` keys.  Returns (assign (N,), loads (N//chunk, n_workers)).
+    """
+    N = keys.shape[0]
+    assert N % chunk == 0 and chunk % block == 0
+    cand = hash_choices(keys, n_workers, d=d, seed=seed)  # (N, d)
+    cand = cand.reshape(N // chunk, chunk // block, block, d)
+
+    def chunk_fn(cand_c):
+        def step(loads, cb):  # cb (block, d)
+            lc = loads[cb]  # (block, d)
+            sel = jnp.argmin(lc, axis=-1)
+            choice = jnp.take_along_axis(cb, sel[:, None], axis=-1)[:, 0]
+            hist = jax.nn.one_hot(choice, n_workers, dtype=jnp.float32).sum(0)
+            return loads + hist, choice
+
+        loads0 = jnp.zeros((n_workers,), jnp.float32)
+        loads, choices = lax.scan(step, loads0, cand_c)
+        return choices.reshape(-1), loads
+
+    assign, loads = jax.vmap(chunk_fn)(cand)
+    return assign.reshape(-1).astype(jnp.int32), loads
+
+
+def ref_moe_pkg_dispatch(cand, cgate, n_experts: int, block: int = 256):
+    """Sequential block-greedy PoTC over expert candidate pairs.
+
+    cand (T,k,2) int32, cgate (T,k,2) f32 -> (idx (T,k), gates (T,k),
+    loads (n_experts,)).  Loads persist across blocks (single estimator).
+    """
+    T, k, _ = cand.shape
+    assert T % block == 0
+    cand_b = cand.reshape(T // block, block, k, 2)
+    gate_b = cgate.reshape(T // block, block, k, 2)
+
+    def step(loads, inp):
+        c, g = inp
+        lc = loads[c]  # (block,k,2)
+        sel = jnp.argmin(lc, axis=-1)
+        idx = jnp.take_along_axis(c, sel[..., None], axis=-1)[..., 0]
+        gsel = jnp.take_along_axis(g, sel[..., None], axis=-1)[..., 0]
+        hist = jax.nn.one_hot(idx.reshape(-1), n_experts, dtype=jnp.float32).sum(0)
+        return loads + hist, (idx, gsel)
+
+    loads0 = jnp.zeros((n_experts,), jnp.float32)
+    loads, (idx, gates) = lax.scan(step, loads0, (cand_b, gate_b))
+    return idx.reshape(T, k), gates.reshape(T, k), loads
+
+
+def ref_flash_attention(q, k, v, causal: bool = True, window: int = 0):
+    """Exact softmax attention with GQA + causal + sliding-window masks.
+
+    q (B,S,H,hd), k/v (B,T,Kv,hd) -> (B,S,H,hd).  fp32 softmax.
+    """
+    B, S, H, hd = q.shape
+    T, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    qg = q.reshape(B, S, Kv, G, hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+    logits = logits * (hd ** -0.5)
+    q_pos = jnp.arange(S)[:, None] + (T - S)  # assume k covers [0, T)
+    k_pos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > (q_pos - window)
+    logits = jnp.where(mask[None, None, None], logits, -1e9)
+    p = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", p, v)
+    return out.reshape(B, S, H, hd)
+
+
+def ref_rmsnorm(x, w, eps: float = 1e-6):
+    """(..., D) RMS norm with (1 + w) scale, fp32 accumulation."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))).astype(x.dtype)

@@ -1,0 +1,46 @@
+"""Pallas TPU kernel: fused RMSNorm (row tiles, fp32 accumulation)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)  # (BR, D)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * (1.0 + w_ref[...].astype(jnp.float32))
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "eps", "interpret"))
+def rmsnorm(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    block_rows: int = 256,
+    eps: float = 1e-6,
+    interpret: bool = True,
+):
+    """x (..., D), w (D,) -> same shape; rows tiled in blocks of block_rows."""
+    shape = x.shape
+    D = shape[-1]
+    x2 = x.reshape(-1, D)
+    R = x2.shape[0]
+    br = min(block_rows, R)
+    pad = (-R) % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=((R + pad) // br,),
+        in_specs=[
+            pl.BlockSpec((br, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        interpret=interpret,
+    )(x2, w)
+    return out[:R].reshape(shape)

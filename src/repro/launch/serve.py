@@ -1,0 +1,58 @@
+"""Serving launcher: batched generation + PoTC replica routing demo.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --tiny \
+      --batch 4 --prompt-len 16 --new-tokens 32 --replicas 4
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--tiny", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--replicas", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=2000)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.configs import get_config, make_tiny
+    from repro.core.streams import zipf_stream
+    from repro.models import init_params
+    from repro.serving import KGScheduler, PoTCScheduler, ServeEngine
+
+    cfg = make_tiny(get_config(args.arch)) if args.tiny else get_config(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    engine = ServeEngine(cfg, params, max_len=args.prompt_len + args.new_tokens)
+
+    rng = np.random.default_rng(args.seed)
+    prompts = jnp.asarray(
+        rng.integers(1, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32
+    )
+    out = engine.generate(prompts, n_new=args.new_tokens)
+    print(f"generated batch {out.shape}; sample row: {np.asarray(out[0])[:24]}...")
+
+    # replica routing: skewed session keys, PoTC vs sticky hashing
+    keys = zipf_stream(args.requests, max(args.requests // 20, 50), 1.1, seed=args.seed)
+    potc, kg = PoTCScheduler(args.replicas), KGScheduler(args.replicas)
+    for k in keys:
+        potc.route(int(k))
+        kg.route(int(k))
+    for name, s in (("PoTC", potc), ("KG", kg)):
+        loads = s.loads
+        print(
+            f"{name}: replica loads {loads.astype(int).tolist()} "
+            f"imbalance={(loads.max()-loads.mean())/loads.sum():.4f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

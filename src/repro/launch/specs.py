@@ -1,0 +1,47 @@
+"""ShapeDtypeStruct input stands-ins for every (arch × shape) dry-run cell.
+
+`input_specs(cfg, shape)` mirrors shannon/kernels: weak-type-correct,
+shardable, zero allocation.  Decode shapes include the full KV-cache structs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.transformer import init_cache
+
+__all__ = ["input_specs", "cache_structs"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def cache_structs(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree matching init_cache (built via eval_shape)."""
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len, dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Returns {'batch': ..., and for decode 'cache': ..., 'pos': ...}."""
+    B, S = shape.global_batch, shape.seq_len
+    out = {}
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "audio_stub":
+            batch = {"embeds": _sds((B, S, cfg.d_model), jnp.bfloat16)}
+            if shape.kind == "train":
+                batch["labels"] = _sds((B, S, cfg.n_io_heads), jnp.int32)
+        else:
+            batch = {"tokens": _sds((B, S), jnp.int32)}
+            if shape.kind == "train":
+                batch["labels"] = _sds((B, S), jnp.int32)
+        out["batch"] = batch
+    else:  # decode: one new token against a seq_len-deep cache
+        if cfg.frontend == "audio_stub":
+            out["batch"] = {"embeds": _sds((B, 1, cfg.d_model), jnp.bfloat16)}
+        else:
+            out["batch"] = {"tokens": _sds((B, 1), jnp.int32)}
+        out["cache"] = cache_structs(cfg, B, S)
+        out["pos"] = _sds((), jnp.int32)
+    return out

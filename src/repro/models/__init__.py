@@ -1,0 +1,8 @@
+from repro.models.transformer import (
+    init_defs,
+    init_params,
+    forward,
+    loss_fn,
+    init_cache,
+    decode_step,
+)

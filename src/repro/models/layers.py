@@ -1,0 +1,232 @@
+"""Core layers: RMSNorm, RoPE, memory-bounded GQA attention, GLU MLPs.
+
+All modules are functional pairs: `<mod>_defs(cfg) -> ParamDef pytree` and
+`<mod>_apply(params, x, ...) -> y`.  Attention is computed in query blocks
+(lax.scan + jax.checkpoint) so the S x S score matrix is never materialized
+-- the XLA analogue of the Pallas flash kernel in repro/kernels (which is the
+TPU production path; this is also its oracle).
+
+`sh(name, x)` is a sharding-constraint hook injected by the launcher
+(identity by default) -- model code stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.parallel.spec import ParamDef
+
+NEG_INF = -1e9
+
+
+def _id_sh(name, x):
+    return x
+
+
+# ---------------------------------------------------------------- RMSNorm
+def rmsnorm_defs(dim: int) -> dict:
+    return {"scale": ParamDef((dim,), (None,), init="zeros")}  # (1 + scale) form
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps) * (1.0 + p["scale"].astype(jnp.float32))
+    return y.astype(dt)
+
+
+# ------------------------------------------------------------------ RoPE
+def rope_freqs(head_dim: int, base: float) -> np.ndarray:
+    return base ** (-np.arange(0, head_dim, 2, dtype=np.float64) / head_dim)
+
+
+def apply_rope(x: jnp.ndarray, pos: jnp.ndarray, base: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); pos: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, base), jnp.float32)  # (hd/2,)
+    ang = pos.astype(jnp.float32)[..., None, None] * freqs  # (..., S, 1, hd/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- Attention
+def attention_defs(cfg) -> dict:
+    # "embed_attn" lets the rule table fully shard attention weights over
+    # (data, model) when head counts cannot TP-shard (DESIGN.md SS6).
+    d, H, Kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    defs = {
+        "wq": ParamDef((d, H, hd), ("embed_attn", "heads", None), fan_in=d),
+        "wk": ParamDef((d, Kv, hd), ("embed_attn", "kv", None), fan_in=d),
+        "wv": ParamDef((d, Kv, hd), ("embed_attn", "kv", None), fan_in=d),
+        "wo": ParamDef((H, hd, d), ("heads", None, "embed_attn"), fan_in=H * hd),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((H, hd), ("heads", None), init="zeros")
+        defs["bk"] = ParamDef((Kv, hd), ("kv", None), init="zeros")
+        defs["bv"] = ParamDef((Kv, hd), ("kv", None), init="zeros")
+    if cfg.qk_norm:
+        defs["q_norm"] = rmsnorm_defs(hd)["scale"]
+        defs["k_norm"] = rmsnorm_defs(hd)["scale"]
+    return defs
+
+
+def _qkv(p, x, cfg, kind, pos):
+    """Project + rope; returns q (B,S,Kv,G,hd), k, v (B,S,Kv,hd)."""
+    H, Kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = rmsnorm({"scale": p["q_norm"]}, q)
+        k = rmsnorm({"scale": p["k_norm"]}, k)
+    base = cfg.rope_base_local if kind == "local" else cfg.rope_base_global
+    q = apply_rope(q, pos, base)
+    k = apply_rope(k, pos, base)
+    q = q.reshape(*q.shape[:2], Kv, H // Kv, hd)
+    return q, k, v
+
+
+def _block_attend(qb, k, v, q_pos, k_pos, cfg, kind):
+    """One query block vs full keys. qb:(B,QB,Kv,G,hd) k/v:(B,T,Kv,hd)."""
+    scale = cfg.head_dim ** -0.5
+    logits = jnp.einsum("bqkgh,btkh->bkgqt", qb, k).astype(jnp.float32) * scale
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    mask = k_pos[None, :] <= q_pos[:, None]
+    if kind == "local" and cfg.window > 0:
+        mask &= k_pos[None, :] > (q_pos[:, None] - cfg.window)
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(qb.dtype)
+    return jnp.einsum("bkgqt,btkh->bqkgh", probs, v)
+
+
+def attention_apply(p, x, cfg, kind, sh: Callable = _id_sh, pos_offset: int = 0):
+    """Full-sequence (train / prefill) attention, q-chunked."""
+    B, S, D = x.shape
+    H, Kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    pos = pos_offset + jnp.arange(S, dtype=jnp.int32)[None]  # (1, S)
+    q, k, v = _qkv(p, x, cfg, kind, pos)
+    q = sh("q", q)
+    # under sequence-parallel attention, gather the (narrow) k/v heads over
+    # seq rather than letting SPMD gather the full-width residual
+    k, v = sh("kv_full", k), sh("kv_full", v)
+    QB = min(cfg.attn_q_block, S)
+    nb = -(-S // QB)
+    pad = nb * QB - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    qb = jnp.moveaxis(q.reshape(B, nb, QB, Kv, H // Kv, hd), 1, 0)
+    k_pos = pos[0]
+
+    @jax.checkpoint
+    def blk(carry, inp):
+        qi, i = inp
+        q_pos = pos_offset + i * QB + jnp.arange(QB, dtype=jnp.int32)
+        return carry, _block_attend(qi, k, v, q_pos, k_pos, cfg, kind)
+
+    if nb == 1:
+        out = _block_attend(qb[0], k, v, k_pos, k_pos, cfg, kind)
+    else:
+        _, out = lax.scan(blk, 0, (qb, jnp.arange(nb)))
+        out = jnp.moveaxis(out, 0, 1).reshape(B, nb * QB, Kv, H // Kv, hd)[:, :S]
+    out = out.reshape(B, S, H, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def attention_decode(p, x, cache, pos, cfg, kind, sh: Callable = _id_sh):
+    """Single-token decode against a (possibly ring) KV cache.
+
+    cache: dict(k=(B,T,Kv,hd), v=..., pos scalar passed separately).
+    For local layers T == window (ring buffer); global layers T == max_len.
+    """
+    B = x.shape[0]
+    H, Kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    posv = jnp.full((1, 1), pos, jnp.int32)
+    q, k_new, v_new = _qkv(p, x, cfg, kind, posv)
+    T = cache["k"].shape[1]
+    slot = (pos % T).astype(jnp.int32) if kind == "local" else pos.astype(jnp.int32)
+    ck = lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+    cv = lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+    ck, cv = sh("cache_k", ck), sh("cache_v", cv)
+    idx = jnp.arange(T, dtype=jnp.int32)
+    if kind == "local":
+        # ring: slot i holds position pos - ((pos - i) mod T)
+        k_pos = pos - ((pos - idx) % T)
+        valid = (k_pos >= 0) & (k_pos <= pos)
+    else:
+        k_pos = idx
+        valid = idx <= pos
+    scale = hd ** -0.5
+    qh = q[:, 0]  # (B,Kv,G,hd)
+    logits = jnp.einsum("bkgh,btkh->bkgt", qh, ck.astype(qh.dtype)).astype(jnp.float32) * scale
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    logits = jnp.where(valid[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(qh.dtype)
+    out = jnp.einsum("bkgt,btkh->bkgh", probs, cv.astype(qh.dtype))
+    out = out.reshape(B, 1, H, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, {"k": ck, "v": cv}
+
+
+# ------------------------------------------------------------------- MLP
+def mlp_defs(cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": ParamDef((d, f), ("embed", "ffn")),
+        "w_up": ParamDef((d, f), ("embed", "ffn")),
+        "w_down": ParamDef((f, d), ("ffn", "embed")),
+    }
+
+
+def mlp_apply(p, x, cfg, sh: Callable = _id_sh):
+    act = jax.nn.gelu if cfg.mlp == "geglu" else jax.nn.silu
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    h = sh("ffn", act(g) * u)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))
+
+
+# ------------------------------------------------------------ Embeddings
+def embed_defs(cfg) -> dict:
+    defs = {"tok": ParamDef((cfg.vocab_padded, cfg.d_model), ("vocab", "embed"), init="embed")}
+    if not cfg.tie_embeddings:
+        defs["unembed"] = ParamDef(
+            (cfg.n_io_heads, cfg.d_model, cfg.vocab_padded), (None, "embed", "vocab")
+        )
+    return defs
+
+
+def embed_apply(p, tokens, cfg):
+    e = jnp.take(p["tok"], tokens, axis=0)
+    return e * jnp.asarray(np.sqrt(cfg.d_model), e.dtype)
+
+
+def unembed_apply(p, x, cfg):
+    """x (B,S,D) -> logits (B,S,V) or (B,S,heads,V); pad vocab masked."""
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, p["tok"].astype(x.dtype))
+        if cfg.n_io_heads > 1:
+            logits = jnp.repeat(logits[:, :, None], cfg.n_io_heads, axis=2)
+    else:
+        logits = jnp.einsum("bsd,hdv->bshv", x, p["unembed"].astype(x.dtype))
+        if cfg.n_io_heads == 1:
+            logits = logits[:, :, 0]
+    if cfg.vocab_padded != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, NEG_INF, logits)
+    return logits

@@ -1,0 +1,166 @@
+"""Mixture-of-Experts layer with two routers:
+
+  topk_aux  — standard softmax top-k + Switch-style load-balancing aux loss
+              (the baseline the paper's KG corresponds to: router's preference
+              is followed regardless of load).
+  pkg_potc  — PARTIAL KEY GROUPING routing (the paper's technique as a
+              first-class MoE feature): for each of the k slots, the token's
+              two candidate experts are its next-two ranked experts; the token
+              goes to the *less loaded* candidate, where load is a running
+              token count maintained per token block (batch-greedy local
+              estimation, DESIGN.md §2).  Balance is structural, so no aux
+              loss and far fewer capacity drops.
+
+Dispatch is capacity-based (GShard layout): tokens are scattered to
+(E, C, d) buffers, expert-GEMM'd, and combined with the (renormalized) gate
+weights.  Experts shard over the "model" axis (EP) when divisible, else the
+d_ff dim shards (TP-experts, e.g. mixtral's 8 experts on a 16-way axis).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.spec import ParamDef
+
+
+def _id_sh(name, x):
+    return x
+
+
+def moe_defs(cfg) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ParamDef((d, E), ("embed", None), init="small"),
+        "w_gate": ParamDef((E, d, f), ("experts", "embed", "ffn")),
+        "w_up": ParamDef((E, d, f), ("experts", "embed", "ffn")),
+        "w_down": ParamDef((E, f, d), ("experts", "ffn", "embed")),
+    }
+
+
+def _pkg_choose(cand, cgate, n_experts: int, block: int):
+    """Block-greedy PoTC over candidate pairs.
+
+    cand:(T,k,2) int32 expert ids, cgate:(T,k,2) gates. Processes tokens in
+    blocks; within a block loads are stale (paper §3.2 local estimation).
+    Returns (idx (T,k), gates (T,k)).
+    """
+    T, k, _ = cand.shape
+    nblk = -(-T // block)
+    pad = nblk * block - T
+    cand_p = jnp.pad(cand, ((0, pad), (0, 0), (0, 0)))
+    gate_p = jnp.pad(cgate, ((0, pad), (0, 0), (0, 0)))
+    cand_b = cand_p.reshape(nblk, block, k, 2)
+    gate_b = gate_p.reshape(nblk, block, k, 2)
+
+    def step(loads, inp):
+        c, g = inp  # (block,k,2)
+        lc = loads[c]  # (block,k,2)
+        sel = jnp.argmin(lc, axis=-1)  # ties -> first (higher-gate) candidate
+        idx = jnp.take_along_axis(c, sel[..., None], axis=-1)[..., 0]
+        gsel = jnp.take_along_axis(g, sel[..., None], axis=-1)[..., 0]
+        hist = jax.nn.one_hot(idx.reshape(-1), n_experts, dtype=jnp.int32).sum(0)
+        return loads + hist, (idx, gsel)
+
+    loads0 = jnp.zeros((n_experts,), jnp.int32)
+    _, (idx, gates) = lax.scan(step, loads0, (cand_b, gate_b))
+    return idx.reshape(-1, k)[:T], gates.reshape(-1, k)[:T]
+
+
+def route(p, x2d, cfg):
+    """x2d (T,d) -> (idx (T,k), gates (T,k), aux_loss scalar)."""
+    T = x2d.shape[0]
+    E, k = cfg.n_experts, cfg.top_k
+    logits = jnp.einsum("td,de->te", x2d, p["router"].astype(x2d.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    if cfg.router == "pkg_potc":
+        topv, topi = lax.top_k(probs, 2 * k)
+        cand = topi.reshape(T, k, 2).astype(jnp.int32)
+        cgate = topv.reshape(T, k, 2)
+        idx, gates = _pkg_choose(cand, cgate, E, cfg.pkg_block)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        gates, idx = lax.top_k(probs, k)
+        # Switch aux loss: E * sum_e f_e * P_e
+        me = jnp.mean(probs, axis=0)  # (E,)
+        assigned = jax.nn.one_hot(idx, E, dtype=jnp.float32).sum(axis=(0, 1))
+        fe = assigned / jnp.maximum(assigned.sum(), 1.0)
+        aux = cfg.aux_loss_coef * E * jnp.sum(fe * me)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return idx.astype(jnp.int32), gates.astype(x2d.dtype), aux
+
+
+def _positions_in_expert(flat_e, n_experts: int, block: int = 1024):
+    """Rank of each assignment within its expert, via two-level blocked
+    prefix sums.  A flat cumsum over T*k tokens lowers to an O(T·window)
+    reduce-window on TPU (and dominates HLO flops at 1M tokens); blocking
+    makes it O(T·block + (T/block)²) — §Perf iteration moe-1."""
+    Tk = flat_e.shape[0]
+    nb = -(-Tk // block)
+    pad = nb * block - Tk
+    fe = jnp.pad(flat_e, (0, pad), constant_values=n_experts)  # pad -> dummy
+    oh = jax.nn.one_hot(fe, n_experts + 1, dtype=jnp.int32).reshape(
+        nb, block, n_experts + 1
+    )
+    within = jnp.cumsum(oh, axis=1)  # (nb, block, E+1)
+    block_tot = within[:, -1]  # (nb, E+1)
+    offsets = jnp.cumsum(block_tot, axis=0) - block_tot  # exclusive block prefix
+    pos = within - 1 + offsets[:, None, :]
+    pos = jnp.take_along_axis(
+        pos.reshape(nb * block, n_experts + 1), fe[:, None], axis=1
+    )[:, 0]
+    return pos[:Tk]
+
+
+def moe_apply(p, x, cfg, sh: Callable = _id_sh):
+    """x (B,S,D) -> (y (B,S,D), aux scalar).
+
+    Dispatch is *grouped per batch row* (GShard groups): each sequence
+    scatters its own S*k assignments into its own (E, C_row, d) buffer with
+    C_row = cf*S*k/E.  With the batch dp-sharded, dispatch/combine are fully
+    shard-local — no cross-device scatter or buffer gather (§Perf moe-3);
+    the same locality argument as the paper's local load estimation.
+    Routing itself stays global (token order), matching the paper's router.
+    """
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    # (§Perf iteration moe-4, refuted: pre-gathering the sequence dim before
+    # dispatch added traffic instead of localizing the scatter — reverted.)
+    x2d = x.reshape(B * S, D)
+    idx, gates, aux = route(p, x2d, cfg)  # (B*S, k)
+
+    cap = max(int(cfg.capacity_factor * S * k / E + 0.5), 4)
+    idx_r = idx.reshape(B, S * k)
+    gates_r = gates.reshape(B, S * k)
+    pos = jax.vmap(lambda fe: _positions_in_expert(fe, E))(idx_r)  # (B, S*k)
+    keep = pos < cap
+    slot = jnp.where(keep, idx_r * cap + pos, E * cap)  # overflow -> scratch row
+
+    xk = jnp.repeat(x, k, axis=1) if k > 1 else x  # (B, S*k, D) token copies
+    buf = jnp.zeros((B, E * cap + 1, D), x.dtype)
+    buf = jax.vmap(lambda b, s, u: b.at[s].add(u))(buf, slot, xk)
+    buf = sh("moe_buffer", buf[:, : E * cap].reshape(B, E, cap, D))
+
+    act = jax.nn.gelu if cfg.mlp == "geglu" else jax.nn.silu
+    g = jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("becd,edf->becf", buf, p["w_up"].astype(x.dtype))
+    h = sh("moe_hidden", act(g) * u)
+    out = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(x.dtype))
+
+    out_flat = jnp.concatenate(
+        [out.reshape(B, E * cap, D), jnp.zeros((B, 1, D), x.dtype)], axis=1
+    )
+    y = jnp.take_along_axis(out_flat, slot[..., None], axis=1)
+    y = y * (gates_r * keep)[..., None].astype(x.dtype)
+    y = y.reshape(B, S, k, D).sum(axis=2) if k > 1 else y.reshape(B, S, D)
+    return y, aux
+
+
+def expert_load_stats(idx, n_experts: int):
+    """Diagnostics: per-expert token counts + max/mean ratio (benchmarks)."""
+    counts = jnp.zeros((n_experts,), jnp.int32).at[idx.reshape(-1)].add(1)
+    maxload = counts.max() / jnp.maximum(counts.mean(), 1e-9)
+    return counts, maxload

@@ -1,0 +1,118 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block:  x -> [W_gate -> GeLU]  ⊙  [W_x -> causal depthwise conv1d -> RG-LRU] -> W_out
+Cell:   r_t = σ(W_a u_t + b_a)          (recurrence gate)
+        i_t = σ(W_i u_t + b_i)          (input gate)
+        log a_t = -c · softplus(Λ) · r_t,  c = 8
+        h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ u_t)
+
+Training uses lax.associative_scan over the sequence (log-space products for
+stability); decode is the O(1) single-step update.  Gate projections are full
+(d_rnn × d_rnn) dense (the reference impl uses block-diagonal-per-head; dense
+is a strict superset, noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.spec import ParamDef
+
+_C = 8.0
+
+
+def _id_sh(name, x):
+    return x
+
+
+def rglru_defs(cfg) -> dict:
+    d, w, cw = cfg.d_model, cfg.rnn_width, cfg.conv_width
+    return {
+        "w_x": ParamDef((d, w), ("embed", "rnn")),
+        "w_gate": ParamDef((d, w), ("embed", "rnn")),
+        "conv_w": ParamDef((cw, w), ("conv", "rnn"), init="small"),
+        "conv_b": ParamDef((w,), ("rnn",), init="zeros"),
+        "gate_a": ParamDef((w, w), ("rnn", None), init="small"),
+        "gate_a_b": ParamDef((w,), (None,), init="zeros"),
+        "gate_i": ParamDef((w, w), ("rnn", None), init="small"),
+        "gate_i_b": ParamDef((w,), (None,), init="zeros"),
+        "lam": ParamDef((w,), (None,), init="ones"),
+        "w_out": ParamDef((w, d), ("rnn", "embed")),
+    }
+
+
+def _causal_conv(u, conv_w, conv_b, state=None):
+    """Depthwise causal conv, width cw. u:(B,S,w). state:(B,cw-1,w) or None."""
+    cw = conv_w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    up = jnp.concatenate([pad, u], axis=1)  # (B, S+cw-1, w)
+    y = sum(
+        up[:, i : i + u.shape[1]] * conv_w[i].astype(u.dtype) for i in range(cw)
+    ) + conv_b.astype(u.dtype)
+    new_state = up[:, -(cw - 1) :] if cw > 1 else pad
+    return y, new_state
+
+
+def _gates(p, u):
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", u, p["gate_a"].astype(u.dtype))
+        + p["gate_a_b"].astype(u.dtype)
+    ).astype(jnp.float32)
+    i = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", u, p["gate_i"].astype(u.dtype))
+        + p["gate_i_b"].astype(u.dtype)
+    ).astype(jnp.float32)
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r  # (B,S,w)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = beta * (i * u.astype(jnp.float32))
+    return log_a, b
+
+
+def rglru_scan(p, u):
+    """u:(B,S,w) -> h:(B,S,w): h_t = a_t h_{t-1} + b_t via associative scan."""
+    log_a, b = _gates(p, u)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 + a2, jnp.exp(a2) * b1 + b2
+
+    la, hb = lax.associative_scan(combine, (log_a, b), axis=1)
+    return hb.astype(u.dtype)
+
+
+def rglru_block_apply(p, x, cfg, sh: Callable = _id_sh):
+    """Full-sequence (train/prefill) recurrent block."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"].astype(x.dtype)))
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_x"].astype(x.dtype))
+    u, _ = _causal_conv(u, p["conv_w"], p["conv_b"])
+    u = sh("rnn", jax.nn.silu(u))
+    h = rglru_scan(p, u)
+    return jnp.einsum("bsw,wd->bsd", h * gate, p["w_out"].astype(x.dtype))
+
+
+def rglru_block_decode(p, x, state, cfg, sh: Callable = _id_sh):
+    """One-step decode. state = {h:(B,w) fp32, conv:(B,cw-1,w)}."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"].astype(x.dtype)))
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_x"].astype(x.dtype))
+    u, conv_state = _causal_conv(u, p["conv_w"], p["conv_b"], state["conv"])
+    u = jax.nn.silu(u)
+    log_a, b = _gates(p, u)  # (B,1,w)
+    h = jnp.exp(log_a[:, 0]) * state["h"] + b[:, 0]  # (B,w) fp32
+    y = (h[:, None].astype(x.dtype)) * gate
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"].astype(x.dtype))
+    return out, {"h": h, "conv": conv_state.astype(state["conv"].dtype)}
+
+
+def rglru_init_state(cfg, batch: int, dtype=jnp.bfloat16):
+    w, cw = cfg.rnn_width, cfg.conv_width
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cw - 1, w), dtype),
+    }

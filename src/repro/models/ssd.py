@@ -1,0 +1,174 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060), chunked dual form.
+
+Forward (train/prefill) uses the block-decomposition: within a chunk of Q
+steps the SSD operator is an attention-like quadratic form with decay masks;
+across chunks a small recurrence carries the (H, P, N) state.  Decode is the
+O(1) recurrence h = exp(dt·a)·h + dt·(x ⊗ B);  y = C·h + D·x.
+
+Layout: d_inner = expand·d_model, H = d_inner/headdim heads of size P,
+G state groups of size N (B/C shared across heads within a group).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.spec import ParamDef
+
+
+def _id_sh(name, x):
+    return x
+
+
+def ssd_defs(cfg) -> dict:
+    d = cfg.d_model
+    di, g, n, h = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_heads
+    cw = cfg.conv_width
+    conv_dim = di + 2 * g * n
+    return {
+        "w_in": ParamDef((d, 2 * di + 2 * g * n + h), ("embed", "rnn")),
+        "conv_w": ParamDef((cw, conv_dim), ("conv", "rnn"), init="small"),
+        "conv_b": ParamDef((conv_dim,), ("rnn",), init="zeros"),
+        "a_log": ParamDef((h,), (None,), init="zeros"),  # a = -exp(a_log) = -1
+        "d_skip": ParamDef((h,), (None,), init="ones"),
+        "dt_bias": ParamDef((h,), (None,), init="zeros"),
+        "norm": ParamDef((di,), (None,), init="zeros"),
+        "w_out": ParamDef((di, d), ("rnn", "embed")),
+    }
+
+
+def _split_in(p, x, cfg):
+    """x (B,S,D) -> z (B,S,di), conv_in (B,S,di+2gn), dt_raw (B,S,H)."""
+    di, g, n, h = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_heads
+    proj = jnp.einsum("bsd,dk->bsk", x, p["w_in"].astype(x.dtype))
+    z = proj[..., :di]
+    conv_in = proj[..., di : di + di + 2 * g * n]
+    dt_raw = proj[..., di + di + 2 * g * n :]
+    return z, conv_in, dt_raw
+
+
+def _conv(u, conv_w, conv_b, state=None):
+    cw = conv_w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    up = jnp.concatenate([pad, u], axis=1)
+    y = sum(
+        up[:, i : i + u.shape[1]] * conv_w[i].astype(u.dtype) for i in range(cw)
+    ) + conv_b.astype(u.dtype)
+    return jax.nn.silu(y), up[:, -(cw - 1) :]
+
+
+def _gated_norm(p, y, z, eps=1e-6):
+    yf = (y * jax.nn.silu(z)).astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * lax.rsqrt(var + eps) * (1.0 + p["norm"].astype(jnp.float32))).astype(y.dtype)
+
+
+def ssd_apply(p, x, cfg, sh: Callable = _id_sh):
+    """Full-sequence chunked SSD. x:(B,S,D) -> (B,S,D)."""
+    B, S, D = x.shape
+    di, G, N, H = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_heads
+    P = cfg.ssm_headdim
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0, f"seq {S} must divide ssm_chunk {Q}"
+    nc = S // Q
+
+    z, conv_in, dt_raw = _split_in(p, x, cfg)
+    u, _ = _conv(conv_in, p["conv_w"], p["conv_b"])
+    xh = u[..., :di].reshape(B, S, H, P)
+    Bm = u[..., di : di + G * N].reshape(B, S, G, N)
+    Cm = u[..., di + G * N :].reshape(B, S, G, N)
+    # broadcast groups over heads
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2)  # (B,S,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+    # (§Perf ssm-1, refuted: forcing head-sharding of the SSD core moved the
+    # reshard points without reducing bytes — SPMD propagation already
+    # head-parallelizes the chunk scan; constraints reverted.)
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (H,)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    da = dt * a  # (B,S,H)
+
+    # chunk views
+    xq = xh.reshape(B, nc, Q, H, P).astype(jnp.float32)
+    Bq = Bh.reshape(B, nc, Q, H, N).astype(jnp.float32)
+    Cq = Ch.reshape(B, nc, Q, H, N).astype(jnp.float32)
+    dtq = dt.reshape(B, nc, Q, H)
+    daq = da.reshape(B, nc, Q, H)
+    cum = jnp.cumsum(daq, axis=2)  # (B,nc,Q,H)
+
+    # --- intra-chunk (quadratic, attention-like with decay mask)
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Qi,Qj,H)
+    ii = jnp.arange(Q)
+    causal = ii[:, None] >= ii[None, :]
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(rel), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Cq, Bq) * decay * dtq[:, :, None, :, :]
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", scores, xq)
+
+    # --- chunk summary states and inter-chunk recurrence
+    last = cum[:, :, -1:, :]  # (B,nc,1,H)
+    wts = jnp.exp(last - cum) * dtq  # (B,nc,Q,H)
+    S_c = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp", wts, Bq, xq)  # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(last[:, :, 0])  # (B,nc,H)
+
+    def step(h, inp):
+        s_c, dec = inp  # (B,H,N,P), (B,H)
+        h_new = h * dec[..., None, None] + s_c
+        return h_new, h  # emit state *before* this chunk
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    _, h_prev = lax.scan(
+        step,
+        h0,
+        (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_prev = jnp.moveaxis(h_prev, 0, 1)  # (B,nc,H,N,P) state entering chunk c
+
+    y_off = jnp.einsum("bcqhn,bchnp->bcqhp", Cq * jnp.exp(cum)[..., None], h_prev)
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = sh("rnn", y.astype(x.dtype).reshape(B, S, di))
+    y = _gated_norm(p, y, z)
+    return jnp.einsum("bsk,kd->bsd", y, p["w_out"].astype(x.dtype))
+
+
+def ssd_decode(p, x, state, cfg, sh: Callable = _id_sh):
+    """One-step decode. state = {h:(B,H,N,P) fp32, conv:(B,cw-1,conv_dim)}."""
+    B = x.shape[0]
+    di, G, N, H = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_heads
+    P = cfg.ssm_headdim
+    z, conv_in, dt_raw = _split_in(p, x, cfg)
+    u, conv_state = _conv(conv_in, p["conv_w"], p["conv_b"], state["conv"])
+    xh = u[:, 0, :di].reshape(B, H, P).astype(jnp.float32)
+    Bm = u[:, 0, di : di + G * N].reshape(B, G, N)
+    Cm = u[:, 0, di + G * N :].reshape(B, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)  # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # (B,H)
+    dec = jnp.exp(dt * a)  # (B,H)
+    h = state["h"] * dec[..., None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhnp", dt, Bh, xh
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, h)  # (B,H,P)
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = _gated_norm(p, y, z)
+    out = jnp.einsum("bsk,kd->bsd", y, p["w_out"].astype(x.dtype))
+    return out, {"h": h, "conv": conv_state.astype(state["conv"].dtype)}
+
+
+def ssd_init_state(cfg, batch: int, dtype=jnp.bfloat16):
+    di, G, N, H = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_heads
+    return {
+        "h": jnp.zeros((batch, H, N, cfg.ssm_headdim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di + 2 * G * N), dtype),
+    }

@@ -1,0 +1,280 @@
+"""Decoder stack: scan-over-superblocks transformer covering all 10 archs.
+
+A config's `attn_pattern` (e.g. 5×local+1×global for gemma3, rglru/rglru/local
+for recurrentgemma, ssd for mamba2) defines a *superblock*; parameters of the
+`n_layers // len(pattern)` superblocks are stacked on a leading axis and the
+stack runs as one lax.scan (compact HLO, fast SPMD compiles at 95 layers).
+Layers beyond the last full superblock ("remainder") are unrolled.
+
+Public API:
+  init_defs / init_params    ParamDef tree -> materialized params
+  forward(params, batch)     train/prefill logits (+ MoE aux loss)
+  loss_fn                    CE + z-loss (+ aux), label -1 = masked
+  init_cache / decode_step   single-token decode over stacked caches
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rglru as R
+from repro.models import ssd as S
+from repro.parallel.spec import ParamDef, materialize
+
+
+def _id_sh(name, x):
+    return x
+
+
+# ------------------------------------------------------------- definitions
+def _layer_defs(cfg, kind: str) -> dict:
+    d = {"ln1": L.rmsnorm_defs(cfg.d_model)}
+    if kind in ("global", "local"):
+        d["mix"] = L.attention_defs(cfg)
+    elif kind == "rglru":
+        d["mix"] = R.rglru_defs(cfg)
+    elif kind == "ssd":
+        d["mix"] = S.ssd_defs(cfg)
+        return d  # mamba2 block has no separate MLP
+    else:
+        raise ValueError(kind)
+    d["ln2"] = L.rmsnorm_defs(cfg.d_model)
+    d["mlp"] = M.moe_defs(cfg) if cfg.n_experts else L.mlp_defs(cfg)
+    return d
+
+
+def _stack_defs(defs: dict, n: int) -> dict:
+    """Prepend a stacked 'layers' axis to every ParamDef leaf."""
+    return jax.tree_util.tree_map(
+        lambda p: ParamDef(
+            (n,) + p.shape, ("layers",) + p.axes,
+            init=p.init, scale=p.scale, fan_in=p.fan_in,
+        ),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def init_defs(cfg) -> dict:
+    pattern = cfg.attn_pattern
+    n_sb, n_rem = cfg.n_superblocks, cfg.n_remainder
+    defs = {"embed": L.embed_defs(cfg), "final_norm": L.rmsnorm_defs(cfg.d_model)}
+    if n_sb:
+        defs["superblocks"] = tuple(
+            _stack_defs(_layer_defs(cfg, k), n_sb) for k in pattern
+        )
+    defs["remainder"] = tuple(
+        _layer_defs(cfg, pattern[i % len(pattern)]) for i in range(n_rem)
+    )
+    return defs
+
+
+def init_params(cfg, key: jax.Array, param_dtype=jnp.float32):
+    return materialize(init_defs(cfg), key, param_dtype)
+
+
+# ------------------------------------------------------------------ layers
+def _apply_layer(p, x, cfg, kind, sh, pos_offset=0):
+    """Pre-norm residual layer; returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rmsnorm(p["ln1"], x)
+    if kind in ("global", "local"):
+        mix = L.attention_apply(p["mix"], h, cfg, kind, sh=sh, pos_offset=pos_offset)
+    elif kind == "rglru":
+        mix = R.rglru_block_apply(p["mix"], h, cfg, sh=sh)
+    else:  # ssd
+        mix = S.ssd_apply(p["mix"], h, cfg, sh=sh)
+    x = sh("residual", x + mix)
+    if kind == "ssd":
+        return x, aux
+    h = L.rmsnorm(p["ln2"], x)
+    if cfg.n_experts:
+        y, aux = M.moe_apply(p["mlp"], h, cfg, sh=sh)
+    else:
+        y = L.mlp_apply(p["mlp"], h, cfg, sh=sh)
+    return sh("residual", x + y), aux
+
+
+def forward_hidden(
+    params,
+    batch: dict,
+    cfg,
+    sh: Callable = _id_sh,
+    remat: bool = True,
+    compute_dtype=jnp.bfloat16,
+):
+    """Full-sequence forward up to the final norm: returns (x (B,S,D), aux)."""
+    if cfg.frontend == "audio_stub":
+        x = batch["embeds"].astype(compute_dtype)
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    else:
+        x = L.embed_apply(params["embed"], batch["tokens"], cfg).astype(compute_dtype)
+    x = sh("residual", x)
+    pattern = cfg.attn_pattern
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.n_superblocks:
+
+        def body(carry, sb_params):
+            x, aux = carry
+            for j, kind in enumerate(pattern):
+                x, a = _apply_layer(sb_params[j], x, cfg, kind, sh)
+                aux = aux + a
+            return (x, aux), None
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        (x, aux_total), _ = lax.scan(body, (x, aux_total), params["superblocks"])
+
+    for i, p in enumerate(params["remainder"]):
+        kind = pattern[i % len(pattern)]
+        fn = functools.partial(_apply_layer, cfg=cfg, kind=kind, sh=sh)
+        if remat:
+            fn = jax.checkpoint(fn, prevent_cse=False)
+        x, a = fn(p, x)
+        aux_total = aux_total + a
+
+    x = L.rmsnorm(params["final_norm"], x)
+    return x, aux_total
+
+
+def forward(
+    params,
+    batch: dict,
+    cfg,
+    sh: Callable = _id_sh,
+    remat: bool = True,
+    compute_dtype=jnp.bfloat16,
+):
+    """Full-sequence forward. Returns (logits, aux): (B,S,V) or (B,S,heads,V)."""
+    x, aux = forward_hidden(params, batch, cfg, sh=sh, remat=remat, compute_dtype=compute_dtype)
+    logits = L.unembed_apply(params["embed"], x, cfg)
+    return sh("logits", logits), aux
+
+
+def prefill_logits(
+    params, batch: dict, cfg, sh: Callable = _id_sh, compute_dtype=jnp.bfloat16
+):
+    """Inference prefill: hidden states for the whole prompt, logits only for
+    the last position (what a serving prefill actually returns)."""
+    x, _ = forward_hidden(params, batch, cfg, sh=sh, remat=False, compute_dtype=compute_dtype)
+    logits = L.unembed_apply(params["embed"], x[:, -1:], cfg)
+    return sh("logits", logits)
+
+
+def loss_fn(
+    params, batch: dict, cfg, sh: Callable = _id_sh, remat: bool = True, z_loss: float = 1e-4
+):
+    """Next-token CE (+ z-loss + MoE aux).  labels == -1 are masked."""
+    logits, aux = forward(params, batch, cfg, sh=sh, remat=remat)
+    labels = batch["labels"]
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = (lse - gold) * mask
+    zl = z_loss * jnp.square(lse) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll.sum() + zl.sum()) / denom + aux
+    return loss, {"nll": nll.sum() / denom, "aux": aux, "ntok": denom}
+
+
+# ------------------------------------------------------------------ decode
+def _layer_cache(cfg, kind, batch, max_len, dtype):
+    if kind in ("global", "local"):
+        T = min(cfg.window, max_len) if (kind == "local" and cfg.window) else max_len
+        shp = (batch, T, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+    if kind == "rglru":
+        return R.rglru_init_state(cfg, batch, dtype)
+    if kind == "ssd":
+        return S.ssd_init_state(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    pattern = cfg.attn_pattern
+    cache = {"superblocks": tuple(), "remainder": tuple()}
+    if cfg.n_superblocks:
+        def stack(kind):
+            one = _layer_cache(cfg, kind, batch, max_len, dtype)
+            return jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (cfg.n_superblocks,) + a.shape).copy(), one
+            )
+        cache["superblocks"] = tuple(stack(k) for k in pattern)
+    cache["remainder"] = tuple(
+        _layer_cache(cfg, pattern[i % len(pattern)], batch, max_len, dtype)
+        for i in range(cfg.n_remainder)
+    )
+    return cache
+
+
+def _decode_layer(p, x, c, pos, cfg, kind, sh):
+    h = L.rmsnorm(p["ln1"], x)
+    if kind in ("global", "local"):
+        mix, c = L.attention_decode(p["mix"], h, c, pos, cfg, kind, sh=sh)
+    elif kind == "rglru":
+        mix, c = R.rglru_block_decode(p["mix"], h, c, cfg, sh=sh)
+    else:
+        mix, c = S.ssd_decode(p["mix"], h, c, cfg, sh=sh)
+    x = x + mix
+    if kind == "ssd":
+        return x, c
+    h = L.rmsnorm(p["ln2"], x)
+    if cfg.n_experts:
+        y, _ = M.moe_apply(p["mlp"], h, cfg, sh=sh)
+    else:
+        y = L.mlp_apply(p["mlp"], h, cfg, sh=sh)
+    return x + y, c
+
+
+def decode_step(
+    params,
+    cache,
+    batch: dict,
+    pos: jnp.ndarray,
+    cfg,
+    sh: Callable = _id_sh,
+    compute_dtype=jnp.bfloat16,
+):
+    """One decode step: batch {'tokens' (B,1)} or {'embeds' (B,1,D)}; pos scalar.
+
+    Returns (logits (B,1,V...), new_cache).
+    """
+    if cfg.frontend == "audio_stub":
+        x = batch["embeds"].astype(compute_dtype)
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    else:
+        x = L.embed_apply(params["embed"], batch["tokens"], cfg).astype(compute_dtype)
+    pattern = cfg.attn_pattern
+    new_sb = []
+    if cfg.n_superblocks:
+
+        def body(x, inp):
+            sb_params, sb_cache = inp
+            new_c = []
+            for j, kind in enumerate(pattern):
+                x, cj = _decode_layer(sb_params[j], x, sb_cache[j], pos, cfg, kind, sh)
+                new_c.append(cj)
+            return x, tuple(new_c)
+
+        x, new_sb = lax.scan(body, x, (params["superblocks"], cache["superblocks"]))
+
+    new_rem = []
+    for i, p in enumerate(params["remainder"]):
+        kind = pattern[i % len(pattern)]
+        x, ci = _decode_layer(p, x, cache["remainder"][i], pos, cfg, kind, sh)
+        new_rem.append(ci)
+
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = L.unembed_apply(params["embed"], x, cfg)
+    if not isinstance(new_sb, tuple):
+        new_sb = tuple(new_sb)
+    return sh("logits", logits), {"superblocks": new_sb, "remainder": tuple(new_rem)}

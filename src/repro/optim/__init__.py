@@ -1,0 +1,2 @@
+from repro.optim.adamw import adamw_init, adamw_update, global_norm, clip_by_global_norm
+from repro.optim.schedules import make_schedule

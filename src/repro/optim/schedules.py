@@ -1,0 +1,28 @@
+"""LR schedules: linear warmup into cosine / linear / constant decay."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["make_schedule"]
+
+
+def make_schedule(kind: str, base_lr: float, warmup_steps: int, total_steps: int,
+                  final_ratio: float = 0.1):
+    warmup_steps = max(warmup_steps, 1)
+
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = (s + 1.0) / warmup_steps  # nonzero LR from the first step
+        frac = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        if kind == "cosine":
+            decay = final_ratio + (1 - final_ratio) * 0.5 * (1 + jnp.cos(np.pi * frac))
+        elif kind == "linear":
+            decay = 1.0 - (1.0 - final_ratio) * frac
+        elif kind == "const":
+            decay = jnp.ones_like(frac)
+        else:
+            raise ValueError(kind)
+        return base_lr * jnp.minimum(warm, decay)
+
+    return fn

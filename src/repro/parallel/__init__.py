@@ -1,0 +1,4 @@
+# NOTE: repro.parallel.sharding imports the model registry, so it must be
+# imported directly (repro.parallel.sharding) to avoid a circular import
+# through the model modules, which only need ParamDef from .spec.
+from repro.parallel.spec import ParamDef, abstract, materialize, partition_specs

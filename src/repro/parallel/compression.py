@@ -1,0 +1,68 @@
+"""Gradient compression for cross-pod data parallelism (int8 + error feedback).
+
+The cross-pod axis of a multi-pod mesh rides DCN-class links (an order of
+magnitude slower than ICI), so the cross-pod gradient reduction is the
+collective to compress.  Scheme: per-tensor int8 quantization with error
+feedback (residual carried to the next step), reduced with all_gather(int8)
++ local dequant-sum — 4x fewer bytes on the wire than an fp32 ring
+all-reduce for small pod counts (documented trade-off: all-gather scales
+with n_pods; for n_pods <= 8 it wins).
+
+Used inside shard_map (see train.loop.make_dp_train_step) so the collective
+and its operand dtype are explicit in the lowered HLO — visible to the
+roofline's collective-bytes parser.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["quantize_int8", "dequantize_int8", "compressed_psum_mean", "ef_init"]
+
+
+def quantize_int8(x: jnp.ndarray):
+    """x -> (int8 codes, fp32 scale). Symmetric per-tensor."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_init(tree):
+    """Zero error-feedback residual matching a gradient tree."""
+    return jax.tree_util.tree_map(lambda g: jnp.zeros(g.shape, jnp.float32), tree)
+
+
+def compressed_psum_mean(grads, ef, axis_name: str):
+    """Mean-reduce `grads` over `axis_name` with int8 codes on the wire.
+
+    Must run inside shard_map.  Returns (mean_grads fp32, new_ef).
+    """
+    n = lax.axis_size(axis_name)
+
+    def leaf(g, e):
+        target = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(target)
+        sent = dequantize_int8(q, scale)
+        new_e = target - sent  # error feedback residual
+        # the barrier pins the wire dtype: without it XLA hoists the f32
+        # dequant convert above the gather and ships f32
+        q = lax.optimization_barrier(q)
+        qs = lax.all_gather(q, axis_name)  # (n, ...) int8 on the wire
+        ss = lax.all_gather(scale, axis_name)  # (n,) fp32 (negligible)
+        mean = jnp.tensordot(
+            ss, qs.astype(jnp.float32), axes=((0,), (0,))
+        ) / n
+        return mean, new_e
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(ef)
+    out = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    mean = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_ef = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return mean, new_ef

@@ -1,0 +1,263 @@
+"""Concrete sharding strategy per (arch config × shape kind × mesh).
+
+Strategy summary (DESIGN.md §6):
+  params    FSDP over "data" (+ "pod" for the largest archs) on the embed dim;
+            TP over "model" on {d_ff, vocab, experts, rnn, q/kv heads when the
+            head count divides the axis}.  When heads cannot TP-shard, the
+            attention weights' embed dim shards over (data, model) instead
+            ("embed_attn"), keeping state fully sharded over all devices.
+  attention head-TP when kv-heads or q-groups divide "model"; otherwise
+            sequence parallel (q sequence-sharded, KV gathered).
+  MoE       EP over "model" when n_experts divides it, else TP-experts (d_ff).
+  activations  batch over ("pod","data"); residual sequence-sharded over
+            "model" (SP); logits vocab-sharded; decode caches sharded on the
+            sequence axis (context-parallel decode for global_batch < dp).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.transformer import init_defs
+from repro.parallel.spec import partition_specs
+
+__all__ = [
+    "ShardingPlan",
+    "make_plan",
+    "param_shardings",
+    "make_sharder",
+    "batch_specs",
+    "cache_specs",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    mesh_axes: tuple[str, ...]
+    tp: int  # size of "model" axis
+    dp: int  # product of data-ish axes
+    fsdp_axes: tuple[str, ...]
+    head_tp: bool  # attention head-TP vs sequence-parallel attention
+    kv_shard: bool  # kv heads TP-shardable
+    experts_ep: bool
+    rnn_tp: bool
+    rules: dict  # logical axis -> mesh axis (params)
+    axis_sizes: tuple[tuple[str, int], ...] = ()
+
+    def axis_size(self, name: str) -> int:
+        return dict(self.axis_sizes).get(name, 1)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def make_plan(
+    cfg,
+    mesh: Mesh,
+    big_arch_fsdp_pod: bool = True,
+    force_big: Optional[bool] = None,
+    inference: bool = False,
+) -> ShardingPlan:
+    axes = tuple(mesh.axis_names)
+    tp = _axis_size(mesh, "model")
+    dp = int(np.prod([_axis_size(mesh, a) for a in ("pod", "data")]))
+    # the biggest archs need optimizer state sharded over every device
+    big = cfg.param_count() > 8e9 if force_big is None else force_big
+    fsdp: tuple[str, ...] = ("data",)
+    if big and big_arch_fsdp_pod and "pod" in axes:
+        fsdp = ("pod", "data")
+    if inference:
+        # weight-stationary serving: bf16 params are TP-sharded over "model"
+        # and replicated over data — no per-step FSDP gathers (§Perf serve-1).
+        # Even deepseek-67b bf16/16-way TP = 8.4 GB/chip fits v5e.
+        fsdp = ()
+    kv_shard = cfg.n_kv_heads > 0 and cfg.n_kv_heads % tp == 0
+    grp = cfg.n_heads // max(cfg.n_kv_heads, 1) if cfg.n_heads else 0
+    head_tp = kv_shard or (grp > 0 and grp % tp == 0)
+    experts_ep = cfg.n_experts > 0 and cfg.n_experts % tp == 0
+    rnn_dim = cfg.rnn_width or (cfg.d_inner if cfg.ssm_state else 0)
+    rnn_tp = rnn_dim > 0 and rnn_dim % tp == 0
+    if cfg.d_ff:
+        assert cfg.d_ff % tp == 0, (cfg.name, cfg.d_ff, tp)
+    assert cfg.vocab_padded % tp == 0, (cfg.name, cfg.vocab_padded, tp)
+
+    # (§Perf iteration attn-1, refuted: replicating non-head-TP attention
+    # weights over "model" did not reduce collective bytes — the per-layer
+    # weight traffic was already amortized — so they stay fully sharded.)
+    rules = {
+        "embed": fsdp,
+        "embed_attn": fsdp if head_tp else tuple(fsdp) + ("model",),
+        "layers": None,
+        "conv": None,
+        "state": None,
+        # EP shards the expert axis; the per-expert d_ff must then stay
+        # unsharded (a spec may use each mesh axis once)
+        "ffn": None if experts_ep else "model",
+        "vocab": "model",
+        "heads": "model" if (cfg.n_heads and cfg.n_heads % tp == 0 and head_tp) else None,
+        "kv": "model" if kv_shard else None,
+        "experts": "model" if experts_ep else None,
+        "rnn": "model" if rnn_tp else None,
+        None: None,
+    }
+    # drop axes absent from this mesh (e.g. "pod" on the single-pod mesh)
+    def _f(v):
+        if v is None:
+            return None
+        if isinstance(v, str):
+            return v if v in axes else None
+        vv = tuple(a for a in v if a in axes)
+        return vv if vv else None
+
+    rules = {k: _f(v) for k, v in rules.items()}
+    sizes = tuple((a, _axis_size(mesh, a)) for a in axes)
+    return ShardingPlan(
+        axes, tp, dp, fsdp, head_tp, kv_shard, experts_ep, rnn_tp, rules, sizes
+    )
+
+
+def param_shardings(cfg, mesh: Mesh, plan: Optional[ShardingPlan] = None):
+    """PartitionSpec pytree for the model parameters."""
+    plan = plan or make_plan(cfg, mesh)
+    defs = init_defs(cfg)
+    return partition_specs(defs, plan.rules)
+
+
+def _dp(plan: ShardingPlan):
+    dp = tuple(a for a in ("pod", "data") if a in plan.mesh_axes)
+    return dp if dp else None
+
+
+def make_sharder(cfg, mesh: Mesh, plan: ShardingPlan, shape_kind: str, global_batch: int):
+    """Return sh(name, x): named with_sharding_constraint hook for model code."""
+    dp = _dp(plan)
+    tp = "model" if "model" in plan.mesh_axes else None
+    dp_size = plan.dp
+    batch_sharded = global_batch % max(dp_size, 1) == 0 and global_batch >= dp_size
+    bax = dp if batch_sharded else None
+    seq_ax = tp if shape_kind in ("train", "prefill") else None
+    # context-parallel decode: tiny batches shard the cache sequence axis over
+    # every mesh axis instead of the batch
+    cache_seq_ax = tp if batch_sharded else tuple(
+        a for a in ("pod", "data", "model") if a in plan.mesh_axes
+    )
+
+    grp = cfg.n_heads // max(cfg.n_kv_heads, 1) if cfg.n_heads else 0
+    if shape_kind == "decode":
+        q_spec = P(bax, None, None, None, None)
+    elif plan.kv_shard:
+        q_spec = P(bax, None, "model", None, None)  # kv-head TP
+    elif grp and grp % max(plan.tp, 1) == 0:
+        q_spec = P(bax, None, None, "model", None)  # q-group TP
+    else:
+        q_spec = P(bax, tp, None, None, None)  # sequence-parallel attention
+    # logits: vocab-TP unless the sequence axis already uses "model" (SP)
+    lg_vocab = tp if seq_ax is None else None
+    specs = {
+        "residual": P(bax, seq_ax, None),
+        "logits": P(bax, seq_ax, lg_vocab)
+        if cfg.n_io_heads == 1
+        else P(bax, seq_ax, None, lg_vocab),
+        "q": q_spec,
+        "kv_full": P(bax, None, "model" if plan.kv_shard else None, None)
+        if shape_kind != "decode"
+        else None,
+        # SP->TP transition: inside MLP/RNN the feature dim takes "model",
+        # so the sequence dim must release it
+        "ffn": P(bax, None, tp),
+        "rnn": P(bax, None, tp if plan.rnn_tp else None),
+        # grouped expert buffers (B, E, C, d): groups follow the dp-sharded
+        # batch (shard-local dispatch, §Perf moe-3); E over "model" when EP,
+        # else the per-expert ffn dim takes "model" (TP-experts)
+        "moe_buffer": P(bax, tp if plan.experts_ep else None, None, None),
+        "moe_hidden": P(bax, tp, None, None)
+        if plan.experts_ep
+        else P(bax, None, None, tp),
+        "cache_k": P(bax, cache_seq_ax, None, None),
+        "cache_v": P(bax, cache_seq_ax, None, None),
+    }
+
+    def sh(name, x):
+        spec = specs.get(name)
+        if spec is None or mesh.empty:
+            return x
+        # never constrain more dims than the array has
+        if len(spec) > x.ndim:
+            return x
+        # drop axes a dim cannot divide (e.g. tiny decode-time MoE capacity)
+        clean = []
+        for dim, entry in zip(x.shape, spec):
+            if entry is None:
+                clean.append(None)
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            tot = int(np.prod([dict(plan.axis_sizes).get(a, 1) for a in names]))
+            clean.append(entry if dim % max(tot, 1) == 0 else None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*clean))
+        )
+
+    return sh
+
+
+def batch_specs(cfg, plan: ShardingPlan, shape_kind: str, global_batch: int) -> dict:
+    """PartitionSpecs for the input batch dict."""
+    dp = _dp(plan)
+    batch_sharded = global_batch % max(plan.dp, 1) == 0 and global_batch >= plan.dp
+    bax = dp if batch_sharded else None
+    out = {}
+    if cfg.frontend == "audio_stub":
+        out["embeds"] = P(bax, None, None)
+        if shape_kind == "train":
+            out["labels"] = P(bax, None, None)
+    else:
+        out["tokens"] = P(bax, None)
+        if shape_kind == "train":
+            out["labels"] = P(bax, None)
+    return out
+
+
+def cache_specs(cfg, plan: ShardingPlan, cache, global_batch: int):
+    """PartitionSpec pytree matching an init_cache() result.
+
+    Attention caches shard on the sequence axis; SSM/RG-LRU states shard on
+    the feature/head axis when divisible.  Leading stacked-layer axes get None.
+    """
+    dp = _dp(plan)
+    batch_sharded = global_batch % max(plan.dp, 1) == 0 and global_batch >= plan.dp
+    bax = dp if batch_sharded else None
+    tp = "model" if "model" in plan.mesh_axes else None
+    cache_seq_ax = tp if batch_sharded else tuple(
+        a for a in ("pod", "data", "model") if a in plan.mesh_axes
+    )
+
+    def leaf_spec(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+        stacked = leaf.ndim and any(n == "superblocks" for n in names)
+        lead = (None,) if stacked else ()
+        last = names[-1]
+        if last in ("k", "v"):
+            seqlen = leaf.shape[1 + len(lead)]
+            seq_ax = cache_seq_ax
+            if isinstance(seq_ax, tuple):
+                tot = int(np.prod([plan.axis_size(a) for a in seq_ax]))
+                if seqlen % max(tot, 1):
+                    seq_ax = None
+            elif seq_ax is not None and seqlen % plan.axis_size(seq_ax):
+                seq_ax = None
+            return P(*lead, bax, seq_ax, None, None)
+        if last == "h":  # rglru (B,w) fp32 or ssd (B,H,N,P)
+            if leaf.ndim - len(lead) == 2:
+                return P(*lead, bax, tp if plan.rnn_tp else None)
+            return P(*lead, bax, tp if plan.rnn_tp else None, None, None)
+        if last == "conv":
+            return P(*lead, bax, None, tp if plan.rnn_tp else None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache)

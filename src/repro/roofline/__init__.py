@@ -1,0 +1,6 @@
+from repro.roofline.analysis import (
+    HW,
+    collective_bytes,
+    roofline_report,
+    model_flops,
+)

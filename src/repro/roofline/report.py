@@ -1,0 +1,101 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun JSONs.
+
+  PYTHONPATH=src python -m repro.roofline.report experiments/dryrun
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def load(outdir: str) -> list[dict]:
+    rows = []
+    for name in sorted(os.listdir(outdir)):
+        if name.endswith(".json"):
+            with open(os.path.join(outdir, name)) as f:
+                rows.append(json.load(f))
+    return rows
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def dryrun_table(rows: list[dict]) -> str:
+    out = [
+        "| arch | shape | mesh | compile s | args/dev | temp/dev | fits v5e | "
+        "flops/dev | coll bytes/dev | AG | AR | RS | A2A |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        mem = r.get("memory", {})
+        c = r["collectives"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['t_compile_s']} | "
+            f"{fmt_bytes(mem.get('argument_bytes'))} | {fmt_bytes(mem.get('temp_bytes'))} | "
+            f"{'Y' if r.get('fits_v5e') else '?'} | {r['flops_per_device']:.2e} | "
+            f"{fmt_bytes(r['collective_bytes_per_device'])} | "
+            f"{fmt_bytes(c['all-gather'])} | {fmt_bytes(c['all-reduce'])} | "
+            f"{fmt_bytes(c['reduce-scatter'])} | {fmt_bytes(c['all-to-all'])} |"
+        )
+    return "\n".join(out)
+
+
+def roofline_table(rows: list[dict]) -> str:
+    out = [
+        "| arch | shape | mesh | compute s | memory s | collective s | dominant | "
+        "bound s | roofline frac | useful/HLO flops |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {rf['compute_s']:.3e} | "
+            f"{rf['memory_s']:.3e} | {rf['collective_s']:.3e} | {rf['dominant']} | "
+            f"{rf['step_lower_bound_s']:.3e} | {rf['roofline_fraction']:.3f} | "
+            f"{r['useful_flops_ratio']:.2f} |"
+        )
+    return "\n".join(out)
+
+
+def main() -> None:
+    outdir = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    rows = load(outdir)
+    sp = [r for r in rows if r["mesh"] == "16x16"]
+    mp = [r for r in rows if r["mesh"] != "16x16"]
+    print("## Dry-run (single-pod 16x16 = 256 chips)\n")
+    print(dryrun_table(sp))
+    print("\n## Dry-run (multi-pod 2x16x16 = 512 chips)\n")
+    print(dryrun_table(mp))
+    print("\n## Roofline (single-pod)\n")
+    print(roofline_table(sp))
+    print("\n## Roofline (multi-pod)\n")
+    print(roofline_table(mp))
+    # summary stats
+    worst = sorted(sp, key=lambda r: r["roofline"]["roofline_fraction"])[:5]
+    print("\nworst roofline fractions (single-pod):")
+    for r in worst:
+        print(
+            f"  {r['arch']}/{r['shape']}: {r['roofline']['roofline_fraction']:.3f} "
+            f"(dom {r['roofline']['dominant']})"
+        )
+    collbound = sorted(
+        sp, key=lambda r: -r["roofline"]["collective_s"] / max(r["roofline"]["step_lower_bound_s"], 1e-12)
+    )[:5]
+    print("most collective-bound (single-pod):")
+    for r in collbound:
+        rf = r["roofline"]
+        print(
+            f"  {r['arch']}/{r['shape']}: coll {rf['collective_s']:.2e}s vs comp {rf['compute_s']:.2e}s"
+        )
+
+
+if __name__ == "__main__":
+    main()

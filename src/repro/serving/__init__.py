@@ -1,0 +1,2 @@
+from repro.serving.scheduler import PoTCScheduler, RoundRobinScheduler, KGScheduler
+from repro.serving.engine import ServeEngine

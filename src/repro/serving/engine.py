@@ -1,0 +1,72 @@
+"""Batched serving engine: prefill + greedy decode over the model's KV caches.
+
+`serve_step` (one token for the whole batch against a pre-sized cache) is the
+function the decode_32k / long_500k dry-run cells lower.  The Python-level
+`generate` drives the jitted step for the examples and tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import decode_step, init_cache
+
+__all__ = ["ServeEngine", "make_serve_step"]
+
+
+def _id_sh(name, x):
+    return x
+
+
+def make_serve_step(cfg, sh: Callable = _id_sh):
+    """Returns serve_step(params, cache, batch, pos) -> (logits, new_cache)."""
+
+    def serve_step(params, cache, batch, pos):
+        return decode_step(params, cache, batch, pos, cfg, sh=sh)
+
+    return serve_step
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, max_len: int = 4096, cache_dtype=jnp.bfloat16):
+        assert cfg.frontend == "tokens", "ServeEngine drives token frontends"
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.cache_dtype = cache_dtype
+        self._step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+
+    def generate(self, prompts: jnp.ndarray, n_new: int, greedy: bool = True,
+                 key: Optional[jax.Array] = None):
+        """prompts (B, S0) int32 -> (B, S0 + n_new) tokens (greedy/sampled).
+
+        Prefill runs through the same single-token step (cache-building pass);
+        production prefill uses the Pallas flash kernel via the prefill path.
+        """
+        B, S0 = prompts.shape
+        cache = init_cache(self.cfg, B, self.max_len, self.cache_dtype)
+        toks = prompts
+        logits = None
+        for t in range(S0):
+            logits, cache = self._step(
+                self.params, cache, {"tokens": toks[:, t : t + 1]}, jnp.int32(t)
+            )
+        out = [toks]
+        cur = None
+        for i in range(n_new):
+            if cur is None:
+                nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            else:
+                logits, cache = self._step(
+                    self.params, cache, {"tokens": cur}, jnp.int32(S0 + i - 1)
+                )
+                nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            if not greedy and key is not None:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(sub, logits[:, -1]).astype(jnp.int32)[:, None]
+            cur = nxt
+            out.append(nxt)
+        return jnp.concatenate(out, axis=1)

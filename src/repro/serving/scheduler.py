@@ -1,0 +1,74 @@
+"""Request -> replica schedulers (the paper's algorithm at the cluster edge).
+
+PoTCScheduler is PKG verbatim: each *frontend* keeps only a local estimate of
+outstanding work per replica; a request's key (e.g. prefix-cache/session id)
+hashes to d=2 candidate replicas; the less-loaded one wins.  Keys therefore
+hit at most 2 replicas (prefix caches stay warm ~2-way) while load stays
+balanced under key skew — the serving analogue of key splitting.
+
+Baselines: KGScheduler (sticky hashing — hot sessions overload one replica)
+and RoundRobinScheduler (balanced but 0% cache affinity).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["PoTCScheduler", "KGScheduler", "RoundRobinScheduler"]
+
+
+def _h32(x: int, seed: int) -> int:
+    v = (x ^ (seed * 0x9E3779B9)) & 0xFFFFFFFF
+    v = ((v ^ (v >> 16)) * 0x7FEB352D) & 0xFFFFFFFF
+    v = ((v ^ (v >> 15)) * 0x846CA68B) & 0xFFFFFFFF
+    return (v ^ (v >> 16)) & 0xFFFFFFFF
+
+
+class PoTCScheduler:
+    """Power-of-two-choices with local load estimation per frontend."""
+
+    def __init__(self, n_replicas: int, d: int = 2, seed: int = 0):
+        self.n = n_replicas
+        self.d = d
+        self.seed = seed
+        self.loads = np.zeros(n_replicas, dtype=np.float64)  # outstanding tokens
+
+    def route(self, key: int, cost: float = 1.0) -> int:
+        cands = [_h32(key, self.seed + j) % self.n for j in range(self.d)]
+        c = min(cands, key=lambda i: self.loads[i])
+        self.loads[c] += cost
+        return c
+
+    def complete(self, replica: int, cost: float = 1.0) -> None:
+        self.loads[replica] = max(0.0, self.loads[replica] - cost)
+
+
+class KGScheduler:
+    """Sticky key-hashing (single choice)."""
+
+    def __init__(self, n_replicas: int, seed: int = 0):
+        self.n, self.seed = n_replicas, seed
+        self.loads = np.zeros(n_replicas, dtype=np.float64)
+
+    def route(self, key: int, cost: float = 1.0) -> int:
+        c = _h32(key, self.seed) % self.n
+        self.loads[c] += cost
+        return c
+
+    def complete(self, replica: int, cost: float = 1.0) -> None:
+        self.loads[replica] = max(0.0, self.loads[replica] - cost)
+
+
+class RoundRobinScheduler:
+    def __init__(self, n_replicas: int, seed: int = 0):
+        self.n = n_replicas
+        self._i = 0
+        self.loads = np.zeros(n_replicas, dtype=np.float64)
+
+    def route(self, key: int, cost: float = 1.0) -> int:
+        c = self._i % self.n
+        self._i += 1
+        self.loads[c] += cost
+        return c
+
+    def complete(self, replica: int, cost: float = 1.0) -> None:
+        self.loads[replica] = max(0.0, self.loads[replica] - cost)

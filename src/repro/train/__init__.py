@@ -1,0 +1,2 @@
+from repro.train.loop import make_train_step, make_dp_train_step, init_train_state
+from repro.train.failover import TrainingHarness, SimulatedFailure

@@ -1,0 +1,9 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests see the real (1-device)
+CPU backend; multi-device tests spawn subprocesses with their own flags."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,99 @@
+"""§4 applications: heavy hitters error bounds and naïve Bayes exactness."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hash_partition, pkg_partition, shuffle_partition, zipf_stream
+from repro.core.applications import (
+    SpaceSaving,
+    StreamingNaiveBayes,
+    distributed_heavy_hitters,
+)
+
+W, CAP = 8, 256
+
+
+def test_spacesaving_exact_when_under_capacity():
+    ss = SpaceSaving(100)
+    keys = np.repeat(np.arange(50), np.arange(1, 51))
+    ss.offer_many(keys)
+    assert ss.max_error() == 0
+    assert ss.estimate(49) == 50 and ss.estimate(0) == 1
+
+
+def test_spacesaving_overestimates_only():
+    keys = zipf_stream(50_000, 5_000, 1.2, seed=0)
+    ss = SpaceSaving(CAP)
+    ss.offer_many(keys)
+    true = np.bincount(keys, minlength=5_000)
+    for k, est in ss.top_k(20):
+        assert est >= true[k]
+        assert est - true[k] <= ss.max_error()
+
+
+def test_heavy_hitters_pkg_merges_two_summaries_sg_merges_w():
+    """§4.2: error bound sums per-summary errors a key's summaries touch —
+    ≤2 under PKG, W under SG — and PKG's top-k recall matches or beats SG."""
+    keys = zipf_stream(200_000, 20_000, 1.1, seed=1)
+    true = np.bincount(keys, minlength=20_000)
+    true_top = set(np.argsort(-true)[:20])
+    ks = jnp.asarray(keys)
+
+    def recall(assign):
+        topk, err, loads = distributed_heavy_hitters(
+            keys, np.asarray(assign), W, CAP
+        )
+        got = {k for k, _ in topk}
+        return len(got & true_top) / 20, err, loads
+
+    r_pkg, e_pkg, l_pkg = recall(pkg_partition(ks, W))
+    r_sg, e_sg, _ = recall(shuffle_partition(ks, W))
+    r_kg, e_kg, l_kg = recall(hash_partition(ks, W))
+    assert r_pkg >= 0.9
+    assert r_pkg >= r_sg - 1e-9
+    # key-splitting: a key's estimate involves <=2 summaries vs W under SG;
+    # the summed worst-case bound reflects it
+    assert e_pkg <= e_sg
+    # and PKG balances where KG does not
+    assert (l_pkg.max() - l_pkg.mean()) < 0.2 * (l_kg.max() - l_kg.mean())
+
+
+def test_naive_bayes_pkg_model_is_exact():
+    """PKG partial counters merge to the exact sequential model (monoid)."""
+    rng = np.random.default_rng(0)
+    vocab, n_classes, n_docs = 500, 3, 300
+    class_words = [rng.permutation(vocab)[:50] for _ in range(n_classes)]
+    docs, labels = [], []
+    for _ in range(n_docs):
+        c = int(rng.integers(n_classes))
+        words = rng.choice(class_words[c], size=20)
+        docs.append(words.astype(np.int32))
+        labels.append(c)
+
+    # sequential reference
+    ref = StreamingNaiveBayes(n_classes)
+    for d, l in zip(docs, labels):
+        ref.observe(d, l)
+
+    # PKG-partitioned: route each word occurrence; workers hold partials
+    flat = np.concatenate(docs)
+    flat_labels = np.concatenate([[l] * len(d) for d, l in zip(docs, labels)])
+    assign = np.asarray(pkg_partition(jnp.asarray(flat), W))
+    workers = [StreamingNaiveBayes(n_classes) for _ in range(W)]
+    for w, word, lab in zip(assign, flat, flat_labels):
+        key = (int(word), int(lab))
+        workers[w].word_class[key] = workers[w].word_class.get(key, 0) + 1
+        workers[w].class_counts[lab] += 1
+    merged = StreamingNaiveBayes(n_classes)
+    for w in workers:
+        merged.merge_counts(w)
+
+    assert merged.word_class == ref.word_class
+    np.testing.assert_array_equal(merged.class_counts, ref.class_counts)
+    # per-word state is split over at most 2 workers (memory claim §3.1)
+    per_word = {}
+    for w, word in zip(assign, flat):
+        per_word.setdefault(int(word), set()).add(int(w))
+    assert max(len(v) for v in per_word.values()) <= 2
+    # and the merged model classifies like the reference
+    test_doc = rng.choice(class_words[1], size=20).astype(np.int32)
+    assert merged.predict(test_doc, vocab) == ref.predict(test_doc, vocab) == 1

@@ -1,0 +1,45 @@
+"""int8 gradient compression: quantization error bounds and error feedback."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.compression import dequantize_int8, ef_init, quantize_int8
+
+
+def test_quantize_roundtrip_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 3.0
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s) - x))
+    assert err.max() <= float(s) * 0.5 + 1e-6
+
+
+def test_quantize_preserves_zero_and_sign():
+    x = jnp.asarray([0.0, 1.0, -1.0, 0.5, -0.5])
+    q, s = quantize_int8(x)
+    d = np.asarray(dequantize_int8(q, s))
+    assert d[0] == 0.0 and d[1] > 0 and d[2] < 0
+
+
+def test_error_feedback_corrects_bias_over_steps():
+    """With EF, the *accumulated* compressed signal tracks the true sum."""
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.normal(size=(256,)) * 0.01)
+    e = jnp.zeros_like(g_true)
+    sent_total = np.zeros(256)
+    for _ in range(50):
+        target = g_true + e
+        q, s = quantize_int8(target)
+        sent = dequantize_int8(q, s)
+        e = target - sent
+        sent_total += np.asarray(sent)
+    true_total = np.asarray(g_true) * 50
+    # relative error of the accumulated signal shrinks (EF property)
+    rel = np.abs(sent_total - true_total).max() / np.abs(true_total).max()
+    assert rel < 0.05, rel
+
+
+def test_ef_init_matches_structure():
+    tree = {"a": jnp.zeros((2, 3)), "b": {"c": jnp.zeros(5)}}
+    ef = ef_init(tree)
+    assert jax.tree_util.tree_structure(ef) == jax.tree_util.tree_structure(tree)
+    assert all(float(jnp.sum(l)) == 0 for l in jax.tree_util.tree_leaves(ef))

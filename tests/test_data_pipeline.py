@@ -1,0 +1,83 @@
+"""PKG data pipeline: determinism, checkpoint/resume replay, host balance."""
+import numpy as np
+
+from repro.data import PKGDataPipeline, SyntheticCorpus
+
+
+def _pipe(partitioner="pkg", host_id=0, n_hosts=4, seed=0):
+    return PKGDataPipeline(
+        batch_size=4,
+        seq_len=128,
+        vocab_size=1000,
+        n_hosts=n_hosts,
+        host_id=host_id,
+        partitioner=partitioner,
+        corpus=SyntheticCorpus(1000, n_keys=512, zipf_z=1.3, seed=seed),
+        seed=seed,
+    )
+
+
+def test_batch_shapes_and_shift():
+    p = _pipe()
+    b = next(p)
+    assert b["tokens"].shape == (4, 128) and b["labels"].shape == (4, 128)
+    # labels are tokens shifted by one within the packed stream
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_deterministic_across_instances():
+    a = [next(_pipe()) for _ in range(1)][0]
+    b = [next(_pipe()) for _ in range(1)][0]
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_resume_replays_exactly():
+    p1 = _pipe()
+    for _ in range(3):
+        next(p1)
+    state = p1.state()
+    expected = [next(p1) for _ in range(3)]
+
+    p2 = _pipe()
+    p2.load_state(state)
+    got = [next(p2) for _ in range(3)]
+    for e, g in zip(expected, got):
+        np.testing.assert_array_equal(e["tokens"], g["tokens"])
+        np.testing.assert_array_equal(e["labels"], g["labels"])
+
+
+def test_pkg_balances_hosts_better_than_kg():
+    """Token-weighted host loads: PKG imbalance << KG under key skew."""
+
+    def run(partitioner):
+        p = _pipe(partitioner=partitioner, seed=3)
+        for _ in range(40):
+            next(p)
+        loads = p.host_loads().astype(float)
+        if partitioner == "kg":  # kg doesn't track loads; recompute from route
+            loads = np.zeros(4)
+            q = _pipe(partitioner="kg", seed=3)
+            for i in range(200):
+                keys, docs = q.corpus.chunk(i)
+                lens = np.array([len(d) for d in docs])
+                hosts = q._route(keys, lens)
+                np.add.at(loads, hosts, lens)
+        return (loads.max() - loads.mean()) / max(loads.mean(), 1)
+
+    pkg = run("pkg")
+    kg = run("kg")
+    assert pkg < 0.02, pkg
+    assert pkg < kg / 3, (pkg, kg)
+
+
+def test_all_hosts_union_covers_stream():
+    """Across hosts, every document lands exactly once (no loss, no dup)."""
+    pipes = [_pipe(host_id=h, seed=9) for h in range(4)]
+    corpus = SyntheticCorpus(1000, n_keys=512, zipf_z=1.3, seed=9)
+    keys, docs = corpus.chunk(0)
+    lens = np.array([len(d) for d in docs])
+    routes = [p._route(keys, lens) for p in pipes]
+    for r in routes[1:]:
+        np.testing.assert_array_equal(routes[0], r)  # same routing everywhere
+    counts = np.bincount(routes[0], minlength=4)
+    assert counts.sum() == len(keys)

@@ -1,0 +1,60 @@
+"""Local load estimation (paper §6.2 Q2): L ≈ G, probing doesn't help,
+high disagreement coexists with good balance (Fig 6)."""
+import numpy as np
+
+from repro.core import (
+    avg_imbalance_fraction,
+    disagreement,
+    simulate_sources,
+    zipf_stream,
+)
+
+W = 8
+
+
+def test_local_close_to_global_oracle():
+    keys = zipf_stream(200_000, 20_000, 1.0, seed=1)
+    g = avg_imbalance_fraction(simulate_sources(keys, W, 5, mode="global"), W)
+    l = avg_imbalance_fraction(simulate_sources(keys, W, 5, mode="local"), W)
+    # paper: "difference from the global variant is always less than one
+    # order of magnitude"
+    assert l < 10 * max(g, 1e-7) + 1e-5, (l, g)
+    assert l < 1e-3
+
+
+def test_robust_to_number_of_sources():
+    keys = zipf_stream(100_000, 10_000, 1.0, seed=2)
+    fracs = [
+        avg_imbalance_fraction(simulate_sources(keys, W, s, mode="local"), W)
+        for s in (1, 5, 10, 20)
+    ]
+    assert all(f < 1e-3 for f in fracs), fracs
+
+
+def test_probing_does_not_improve():
+    keys = zipf_stream(100_000, 10_000, 1.0, seed=3)
+    l = avg_imbalance_fraction(simulate_sources(keys, W, 5, mode="local"), W)
+    lp = avg_imbalance_fraction(
+        simulate_sources(keys, W, 5, mode="probe", probe_period=1_000), W
+    )
+    # probing is at best comparable (paper: "does not improve load balance")
+    assert lp > l / 10, (lp, l)
+
+
+def test_high_disagreement_low_imbalance():
+    """L and G make very different choices yet both balance well (Fig 6)."""
+    keys = zipf_stream(100_000, 10_000, 0.8, seed=4)
+    ag = simulate_sources(keys, W, 5, mode="global")
+    al = simulate_sources(keys, W, 5, mode="local")
+    dis = disagreement(ag, al)
+    assert dis > 0.10, dis  # substantially different routing decisions
+    assert avg_imbalance_fraction(al, W) < 1e-3
+
+
+def test_skewed_sources_fig8():
+    """KG-partitioned sources (graph out-degree skew) stay balanced."""
+    from repro.core import graph_edge_stream
+
+    src, dst = graph_edge_stream(100_000, 5_000, 20_000, seed=5)
+    a = simulate_sources(dst, W, n_sources=10, mode="local", source_keys=src)
+    assert avg_imbalance_fraction(a, W) < 2e-3

@@ -1,0 +1,50 @@
+"""Init-scale invariants: gradient norms must not compound with depth
+(regression test for the 3-D fan-in bug found during the 100M run)."""
+import dataclasses
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data import PKGDataPipeline, SyntheticCorpus
+from repro.models import init_params
+from repro.models.transformer import loss_fn
+
+
+def _cfg(L):
+    return ModelConfig(
+        name=f"probe-{L}", family="dense", n_layers=L, d_model=256,
+        n_heads=8, n_kv_heads=4, head_dim=32, d_ff=512, vocab_size=4096,
+        attn_pattern=("global",), tie_embeddings=True, attn_q_block=64,
+    )
+
+
+def _gnorm(L):
+    cfg = _cfg(L)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    pipe = PKGDataPipeline(batch_size=2, seq_len=64, vocab_size=cfg.vocab_size,
+                           corpus=SyntheticCorpus(cfg.vocab_size, n_keys=512, mean_len=64, seed=1),
+                           seed=1)
+    batch = {k: jnp.asarray(v) for k, v in next(pipe).items()}
+    (_, _), g = jax.jit(jax.value_and_grad(lambda p, b: loss_fn(p, b, cfg), has_aux=True))(
+        params, batch
+    )
+    return float(jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                              for x in jax.tree_util.tree_leaves(g))))
+
+
+def test_gradient_norm_stable_with_depth():
+    g2, g12 = _gnorm(2), _gnorm(12)
+    assert g12 < 30 * g2, (g2, g12)  # exponential blowup would be >1000x
+    assert g12 < 100, (g2, g12)
+
+
+def test_attention_init_std_uses_d_model_fan_in():
+    cfg = _cfg(2)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    wq = np.asarray(params["superblocks"][0]["mix"]["wq"])
+    assert abs(wq.std() - 1 / np.sqrt(cfg.d_model)) < 0.2 / np.sqrt(cfg.d_model)
+    wo = np.asarray(params["superblocks"][0]["mix"]["wo"])
+    assert abs(wo.std() - 1 / np.sqrt(cfg.n_heads * cfg.head_dim)) < 0.2 / np.sqrt(256)

@@ -1,0 +1,81 @@
+"""Hypothesis property tests for the PKG invariants (paper §3.2, §5)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    hash_choices,
+    local_imbalance_bound,
+    pkg_partition,
+    shuffle_partition,
+    simulate_sources,
+    source_assignment,
+    zipf_stream,
+)
+
+keys_strategy = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.lists(keys_strategy, min_size=10, max_size=400),
+    st.integers(min_value=2, max_value=32),
+    st.integers(min_value=2, max_value=4),
+)
+def test_pkg_routes_only_to_candidates(keys, n_workers, d):
+    ks = jnp.asarray(np.asarray(keys, np.int32))
+    a = np.asarray(pkg_partition(ks, n_workers, d=d))
+    cand = np.asarray(hash_choices(ks, n_workers, d=d))
+    assert (a[:, None] == cand).any(axis=1).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=5000),
+    st.integers(min_value=2, max_value=64),
+)
+def test_shuffle_perfect_balance(m, n_workers):
+    a = np.asarray(shuffle_partition(jnp.zeros(m, jnp.int32), n_workers))
+    loads = np.bincount(a, minlength=n_workers)
+    assert loads.max() - loads.min() <= 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=10_000),
+    st.integers(min_value=2, max_value=16),
+    st.sampled_from([0.5, 1.0, 1.5]),
+    st.integers(min_value=1, max_value=8),
+)
+def test_local_imbalance_upper_bounds_global(seed, n_workers, z, n_sources):
+    """Theorem §3.2: I(t) <= sum_j local imbalances, for the realized loads."""
+    keys = zipf_stream(4000, 500, z, seed=seed)
+    assign = simulate_sources(keys, n_workers, n_sources=n_sources, mode="local")
+    src = source_assignment(len(keys), n_sources)
+    gi, li = local_imbalance_bound(keys, assign, src, n_workers, n_sources)
+    assert gi <= li + 1e-9
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=0, max_value=1000))
+def test_load_conservation(seed):
+    keys = zipf_stream(2000, 100, 1.2, seed=seed)
+    a = np.asarray(pkg_partition(jnp.asarray(keys), 8))
+    assert np.bincount(a, minlength=8).sum() == len(keys)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=100),
+    st.integers(min_value=1, max_value=6),
+)
+def test_hash_choices_uniform_and_independent_of_order(seed, d):
+    keys = np.arange(1000, dtype=np.int32)
+    c1 = np.asarray(hash_choices(jnp.asarray(keys), 16, d=d, seed=seed))
+    perm = np.random.default_rng(0).permutation(1000)
+    c2 = np.asarray(hash_choices(jnp.asarray(keys[perm]), 16, d=d, seed=seed))
+    assert (c1[perm] == c2).all()
+    # rough uniformity: each worker gets 1000*d/16 ± 5 sigma
+    counts = np.bincount(c1.reshape(-1), minlength=16)
+    expect = 1000 * d / 16
+    assert (np.abs(counts - expect) < 5 * np.sqrt(expect) + 10).all()

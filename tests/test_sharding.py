@@ -1,0 +1,86 @@
+"""Sharding plan correctness for every assigned arch at production mesh sizes
+— validates divisibility of every parameter dim against its assigned mesh
+axes WITHOUT compiling (fast; the dry-run is the full proof)."""
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.models.transformer import init_defs
+from repro.parallel.spec import ParamDef, partition_specs
+
+SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+def _rules_for(arch, axes=("pod", "data", "model")):
+    """Replicates make_plan's rule table without a concrete jax mesh."""
+    cfg = get_config(arch)
+    tp = SIZES["model"]
+    kv_shard = cfg.n_kv_heads > 0 and cfg.n_kv_heads % tp == 0
+    grp = cfg.n_heads // max(cfg.n_kv_heads, 1) if cfg.n_heads else 0
+    head_tp = kv_shard or (grp > 0 and grp % tp == 0)
+    experts_ep = cfg.n_experts > 0 and cfg.n_experts % tp == 0
+    rnn_dim = cfg.rnn_width or (cfg.d_inner if cfg.ssm_state else 0)
+    rnn_tp = rnn_dim > 0 and rnn_dim % tp == 0
+    big = cfg.param_count() > 8e9
+    fsdp = ("pod", "data") if big else ("data",)
+    return cfg, {
+        "embed": fsdp,
+        "embed_attn": fsdp if head_tp else tuple(fsdp) + ("model",),
+        "layers": None, "conv": None, "state": None,
+        "ffn": None if experts_ep else "model",
+        "vocab": "model",
+        "heads": "model" if (cfg.n_heads and cfg.n_heads % tp == 0 and head_tp) else None,
+        "kv": "model" if kv_shard else None,
+        "experts": "model" if experts_ep else None,
+        "rnn": "model" if rnn_tp else None,
+        None: None,
+    }
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_every_param_dim_divides_its_axes(arch):
+    cfg, rules = _rules_for(arch)
+    defs = init_defs(cfg)
+    leaves = [
+        l for l in
+        __import__("jax").tree_util.tree_leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+        if isinstance(l, ParamDef)
+    ]
+    assert leaves
+    for d in leaves:
+        for dim, ax in zip(d.shape, d.axes):
+            rule = rules.get(ax)
+            if rule is None:
+                continue
+            axes = (rule,) if isinstance(rule, str) else rule
+            tot = int(np.prod([SIZES[a] for a in axes]))
+            assert dim % tot == 0, (arch, d.shape, d.axes, ax, rule)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_no_duplicate_mesh_axis_per_spec(arch):
+    from jax.sharding import PartitionSpec as P
+    import jax
+
+    cfg, rules = _rules_for(arch)
+    specs = partition_specs(init_defs(cfg), rules)
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=lambda s: isinstance(s, P))
+    assert leaves
+    for spec in leaves:
+        assert isinstance(spec, P), spec
+        flat = []
+        for entry in spec:
+            if entry is None:
+                continue
+            flat.extend(entry if isinstance(entry, tuple) else (entry,))
+        assert len(flat) == len(set(flat)), (arch, spec)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_big_arch_state_fits_512_devices(arch):
+    """Full train state (bf16-compute fp32-master AdamW) must fit 512 x 16GB."""
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    state_bytes = n * (4 + 4 + 4)  # fp32 master + m + v
+    per_dev = state_bytes / 512
+    assert per_dev < 12 * 1024**3, (arch, per_dev / 1e9)

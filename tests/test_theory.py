@@ -1,0 +1,41 @@
+"""Empirical checks of Theorem 5.1: with p1 <= 1/(5n) and m >= n^2,
+I(m) = O(m/n) for d >= 2 while d = 1 carries an extra ln n / ln ln n factor.
+Uses the paper's own tight-case distribution (uniform over 5n keys)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pkg_partition, uniform_stream
+
+
+def _imbalance_fraction(n_workers, d, m, seed=0):
+    keys = uniform_stream(m, 5 * n_workers, seed=seed)
+    a = np.asarray(pkg_partition(jnp.asarray(keys), n_workers, d=d, seed=seed))
+    loads = np.bincount(a, minlength=n_workers)
+    return (loads.max() - loads.mean()) / m
+
+
+def test_greedy2_linear_in_m_over_n():
+    """I(m)*n/m stays O(1) for d=2 across n (the Theorem 5.1 upper bound)."""
+    for n in (8, 16, 32):
+        m = max(40 * n * n, 20_000)
+        frac = _imbalance_fraction(n, d=2, m=m)
+        assert frac * n < 1.0, (n, frac)
+
+
+def test_greedy1_worse_than_greedy2():
+    n = 16
+    m = 50_000
+    f1 = np.mean([_imbalance_fraction(n, 1, m, s) for s in range(3)])
+    f2 = np.mean([_imbalance_fraction(n, 2, m, s) for s in range(3)])
+    assert f1 > 2 * f2, (f1, f2)
+
+
+def test_imbalance_grows_linearly_when_p1_large():
+    """When p1 > 2/n no scheme can avoid Omega(m) imbalance (§5.1 example)."""
+    n = 16
+    keys = np.zeros(20_000, dtype=np.int32)  # single key: p1 = 1
+    a = np.asarray(pkg_partition(jnp.asarray(keys), n))
+    loads = np.bincount(a, minlength=n)
+    frac = (loads.max() - loads.mean()) / len(keys)
+    # two bins share all the mass: imbalance fraction -> 1/2 - 1/n
+    assert frac > 0.25
