@@ -16,6 +16,7 @@ import numpy as np
 from repro.core import (
     PARTITIONERS,
     avg_imbalance_fraction,
+    d_choices_partition,
     hash_partition,
     off_greedy_partition,
     on_greedy_partition,
@@ -24,6 +25,7 @@ from repro.core import (
     potc_static_partition,
     shuffle_partition,
     simulate_sources,
+    w_choices_partition,
 )
 
 
@@ -58,6 +60,10 @@ def route(method: str, keys: np.ndarray, n_workers: int, n_keys: Optional[int] =
             return on_greedy_partition(ks, n_workers, n_keys)
         if method == "off_greedy":
             return off_greedy_partition(ks, n_workers, n_keys)
+        if method == "d_choices":
+            return d_choices_partition(keys, n_workers, d=d, seed=seed)
+        if method == "w_choices":
+            return w_choices_partition(keys, n_workers, d=d, seed=seed)
         raise ValueError(method)
 
     a = np.asarray(call())  # warm-up/compile

@@ -21,6 +21,7 @@ from benchmarks import (
     bench_fig9,
     bench_kernels,
     bench_moe_balance,
+    bench_scale_choices,
     bench_storm_sim,
     bench_table2,
     bench_theory,
@@ -40,6 +41,7 @@ MODULES = [
     ("moe_balance", bench_moe_balance),
     ("batched_fidelity", bench_batched_fidelity),
     ("kernels", bench_kernels),
+    ("scale_choices", bench_scale_choices),
 ]
 
 

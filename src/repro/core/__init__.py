@@ -2,6 +2,7 @@
 from repro.core.hashing import hash_choices, splitmix32, derive_seeds
 from repro.core.partitioners import (
     PARTITIONERS,
+    d_choices_partition,
     hash_partition,
     off_greedy_partition,
     on_greedy_partition,
@@ -9,8 +10,12 @@ from repro.core.partitioners import (
     pkg_partition_batched,
     potc_static_partition,
     shuffle_partition,
+    w_choices_partition,
 )
 from repro.core.estimation import (
+    SpaceSavingTracker,
+    adaptive_d,
+    head_threshold,
     local_imbalance_bound,
     simulate_sources,
     source_assignment,
@@ -26,6 +31,8 @@ from repro.core.metrics import (
 )
 from repro.core.streams import (
     PAPER_DATASETS,
+    SCALE_SCENARIOS,
+    ScaleScenario,
     StreamSpec,
     drift_stream,
     graph_edge_stream,

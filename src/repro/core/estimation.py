@@ -1,14 +1,23 @@
-"""Multi-source simulation with local load estimation (paper SS3.2, SS6.2 Q2).
+"""Load and frequency estimation (paper SS3.2, SS6.2 Q2; DESIGN.md SS3.3).
 
-A single lax.scan walks the stream in global arrival order, carrying
-  local_est : (S, n)  per-source local load estimates
-  global_ld : (n,)    true worker loads
-Each message is routed by its source's *local* estimate (technique L), by the
-true loads (G, the global oracle), or by local estimates that are periodically
-reset to the true loads (LP, probing every probe_period messages).
+Two kinds of estimators live here:
 
-Source assignment of messages is either round-robin shuffle (the default in
-the paper) or key grouping on a secondary key (Fig 8's skewed-sources setup).
+1. Multi-source *load* simulation.  A single lax.scan walks the stream in
+   global arrival order, carrying
+     local_est : (S, n)  per-source local load estimates
+     global_ld : (n,)    true worker loads
+   Each message is routed by its source's *local* estimate (technique L), by
+   the true loads (G, the global oracle), or by local estimates that are
+   periodically reset to the true loads (LP, probing every probe_period
+   messages).  Source assignment of messages is either round-robin shuffle
+   (the default in the paper) or key grouping on a secondary key (Fig 8's
+   skewed-sources setup).
+
+2. Streaming *frequency* estimation for the adaptive multi-choice
+   partitioners (arXiv 1510.05714).  SpaceSavingTracker identifies the head
+   keys of the stream in O(capacity) space; head_threshold / adaptive_d
+   encode the head/tail rule and the skew-adaptive choice count d(k)
+   (DESIGN.md SS3.3).
 """
 from __future__ import annotations
 
@@ -20,9 +29,17 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.core.applications import SpaceSaving
 from repro.core.hashing import hash_choices
 
-__all__ = ["simulate_sources", "source_assignment", "local_imbalance_bound"]
+__all__ = [
+    "simulate_sources",
+    "source_assignment",
+    "local_imbalance_bound",
+    "SpaceSavingTracker",
+    "head_threshold",
+    "adaptive_d",
+]
 
 
 def source_assignment(
@@ -126,3 +143,98 @@ def local_imbalance_bound(
     gi = global_ld.max() - global_ld.mean()
     li = (per.max(axis=1) - per.mean(axis=1)).sum()
     return float(gi), float(li)
+
+
+def head_threshold(n_workers: int, d: int = 2) -> float:
+    """Head/tail frequency cut (DESIGN.md SS3.3).
+
+    PKG with d choices balances iff p1 <= d/W (paper SS5; arXiv 1504.00788's
+    bound degrades past it).  A key whose frequency fraction exceeds d/W
+    therefore cannot be absorbed by d candidates and belongs to the head.
+    """
+    return d / n_workers
+
+
+def adaptive_d(
+    p_hat: np.ndarray,
+    n_workers: int,
+    d_base: int = 2,
+    d_max: int = 16,
+    slack: float = 2.0,
+) -> np.ndarray:
+    """D-Choices rule (arXiv 1510.05714; DESIGN.md SS3.3).
+
+    A key with frequency fraction p spreads p/d(k) of the stream on each of
+    its candidates; keeping that at most 1/(slack*W)-ish of the fair share
+    needs d(k) >= slack * p * W.  Clipped to [d_base, d_max].
+    """
+    need = np.ceil(slack * np.asarray(p_hat, np.float64) * n_workers)
+    return np.clip(need, d_base, d_max).astype(np.int32)
+
+
+class SpaceSavingTracker:
+    """Streaming head-key tracker: weighted SPACESAVING + running total.
+
+    Wraps applications.SpaceSaving with (a) vectorised chunked updates for
+    array streams (unique+counts per chunk, heaviest offered first -- a valid
+    weighted SPACESAVING schedule) and (b) frequency-*fraction* queries, which
+    is what the adaptive partitioners consume.  Estimation error is bounded by
+    total/capacity, so head detection at threshold theta is exact up to
+    1/capacity (choose capacity >> 1/theta).
+    """
+
+    def __init__(self, capacity: int = 1024):
+        self.capacity = capacity
+        self._ss = SpaceSaving(capacity)
+        self.total = 0
+
+    def offer(self, key: int, weight: int = 1) -> None:
+        self._ss.offer(int(key), int(weight))
+        self.total += int(weight)
+
+    def update(self, keys: np.ndarray, chunk: int = 8192) -> None:
+        """Consume an array of keys in stream order (chunked internally)."""
+        keys = np.asarray(keys).reshape(-1)
+        for lo in range(0, len(keys), chunk):
+            uniq, cnt = np.unique(keys[lo : lo + chunk], return_counts=True)
+            order = np.argsort(-cnt, kind="stable")
+            for k, w in zip(uniq[order], cnt[order]):
+                self._ss.offer(int(k), int(w))
+        self.total += len(keys)
+
+    def guaranteed_count(self, key: int) -> int:
+        """Lower bound on the true count: estimate minus inherited error."""
+        k = int(key)
+        return self._ss.counts.get(k, 0) - self._ss.errors.get(k, 0)
+
+    def is_head(self, key: int, theta: float, min_count: int = 1) -> bool:
+        """Streaming head query, conservative on both ends.  `min_count`
+        guards against early-stream noise (with a handful of observations any
+        fraction clears theta trivially); the threshold test uses the
+        error-corrected count so a cold key that re-enters a saturated
+        summary — inheriting the evicted minimum — cannot be mistaken for
+        head when theta <= 1/capacity.  head_keys() deliberately stays on raw
+        estimates: over-inclusion only costs extra splitting there, while a
+        false head here breaks bounded-fanout contracts."""
+        return (
+            self.total > 0
+            and self._ss.estimate(int(key)) >= min_count
+            and self.guaranteed_count(key) >= theta * self.total
+        )
+
+    def head_keys(self, theta: float) -> tuple[np.ndarray, np.ndarray]:
+        """All tracked keys with estimated frequency fraction >= theta.
+
+        Returns (ids (h,) int64 sorted, p_hat (h,) float64 aligned).
+        """
+        if self.total == 0:
+            return np.empty(0, np.int64), np.empty(0, np.float64)
+        items = [
+            (k, c / self.total)
+            for k, c in self._ss.counts.items()
+            if c / self.total >= theta
+        ]
+        items.sort()
+        ids = np.asarray([k for k, _ in items], np.int64)
+        p = np.asarray([p for _, p in items], np.float64)
+        return ids, p

@@ -24,6 +24,8 @@ __all__ = [
     "uniform_stream",
     "StreamSpec",
     "PAPER_DATASETS",
+    "ScaleScenario",
+    "SCALE_SCENARIOS",
 ]
 
 
@@ -167,6 +169,40 @@ class StreamSpec:
             return zipf_stream(m, self.n_keys, self.z, seed=seed)
         assert self.mu is not None and self.sigma is not None
         return lognormal_stream(m, self.n_keys, self.mu, self.sigma, seed=seed)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleScenario:
+    """Large-deployment regime of arXiv 1510.05714 (DESIGN.md SS3.3).
+
+    Workers outnumber the head keys (W ∈ {50, 100}) under heavy skew
+    (z ∈ [1.4, 2.0]), the regime where plain d=2 PKG stops balancing
+    (p1 > d/W) and the adaptive D-/W-Choices partitioners take over.
+    """
+
+    name: str
+    n_workers: int
+    z: float
+    n_msgs: int = 200_000
+    n_keys: int = 10_000
+
+    def generate(self, seed: int = 0, scale: float = 1.0) -> np.ndarray:
+        m = max(int(self.n_msgs * scale), 1000)
+        return zipf_stream(m, self.n_keys, self.z, seed=seed)
+
+    def head_fraction(self) -> float:
+        """p1 of the scenario's Zipf pmf — compare against d/W balanceability."""
+        return float(zipf_probs(self.n_keys, self.z)[0])
+
+
+SCALE_SCENARIOS = {
+    s.name: s
+    for s in (
+        ScaleScenario(f"W{w}_z{z:.1f}", n_workers=w, z=z)
+        for w in (50, 100)
+        for z in (1.4, 1.6, 1.8, 2.0)
+    )
+}
 
 
 # Paper Table 1, messages scaled down by default (see DESIGN.md SS9.4);

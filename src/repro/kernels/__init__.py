@@ -3,6 +3,7 @@ with jnp oracles in ref.py and jit'd wrappers in ops.py.  On CPU they run in
 interpret mode (correctness); on TPU they compile natively."""
 from repro.kernels import ref
 from repro.kernels.ops import (
+    adaptive_route,
     flash_attention,
     interpret_mode,
     moe_pkg_dispatch,

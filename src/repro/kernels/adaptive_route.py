@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: adaptive multi-choice stream router (D-/W-Choices).
+
+Same batch-greedy skeleton as pkg_route.py (one program per chunk, VMEM load
+vector, vector blocks of V lanes) but the number of candidates is
+*data-dependent per key*: the router consumes a second int32 array
+n_cand (N,) with values in [1, d_max] (produced by the SPACESAVING head
+tracker, DESIGN.md SS3.3).  All d_max hashes are always computed and padded
+into the one-hot matmul — the TPU-native formulation of DESIGN.md SS2/SS7 is
+preserved — and candidates j >= n_cand[i] are masked to +BIG before the
+lane-wise argmin, so tail keys (n_cand == 2) reproduce plain PKG bit-exactly.
+
+  hash   : SplitMix32 over (key ^ seed_j), j < d_max      (VPU int ops)
+  lookup : one-hot(cand) @ loads                          (MXU matmul)
+  mask   : lane j participates iff j < n_cand             (VPU select)
+  choose : lane-wise argmin over d_max masked candidates
+  update : loads += ones @ one-hot(choice)                (MXU matmul)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core.hashing import derive_seeds, splitmix32
+
+# Mask sentinel: 1e30 is > any reachable load and fp32-exact; ref.py uses the
+# same literal so kernel and oracle stay bit-identical.
+
+
+def _kernel(keys_ref, ncand_ref, seeds_ref, assign_ref, loads_ref, *,
+            n_workers, d_max, block):
+    chunk = keys_ref.shape[0]
+    nblk = chunk // block
+    seeds = seeds_ref[...]  # (d_max,) uint32
+    wid = jnp.arange(n_workers, dtype=jnp.int32)
+    col = jnp.arange(d_max, dtype=jnp.int32)
+
+    def body(i, loads):  # loads (1, n_workers) f32
+        kb = keys_ref[pl.ds(i * block, block)].astype(jnp.uint32)  # (V,)
+        nc = ncand_ref[pl.ds(i * block, block)]  # (V,)
+        h = splitmix32(kb[:, None] ^ seeds[None, :])  # (V, d_max)
+        cand = (h % jnp.uint32(n_workers)).astype(jnp.int32)  # (V, d_max)
+        onehot_c = (cand[..., None] == wid).astype(jnp.float32)  # (V, d_max, n)
+        lc = jax.lax.dot_general(
+            onehot_c.reshape(block * d_max, n_workers),
+            loads.reshape(n_workers, 1),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).reshape(block, d_max)
+        lc = jnp.where(col[None, :] < nc[:, None], lc, 1e30)
+        sel = jnp.argmin(lc, axis=-1)  # (V,)
+        choice = jnp.take_along_axis(cand, sel[:, None], axis=-1)[:, 0]
+        assign_ref[pl.ds(i * block, block)] = choice
+        hist = (choice[:, None] == wid).astype(jnp.float32).sum(axis=0)
+        return loads + hist[None, :]
+
+    loads = lax.fori_loop(0, nblk, body, jnp.zeros((1, n_workers), jnp.float32))
+    loads_ref[...] = loads
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_workers", "d_max", "seed", "chunk", "block", "interpret"),
+)
+def adaptive_route(
+    keys: jnp.ndarray,
+    n_cand: jnp.ndarray,
+    n_workers: int,
+    d_max: int = 4,
+    seed: int = 0,
+    chunk: int = 1024,
+    block: int = 128,
+    interpret: bool = True,
+):
+    """Route keys (N,) int32 with per-key candidate counts n_cand (N,).
+
+    Returns (assign (N,), per-chunk loads (N/chunk, n_workers)).
+    N must divide by chunk; chunk by block.  interpret=True on CPU.
+    """
+    N = keys.shape[0]
+    assert N % chunk == 0 and chunk % block == 0, (N, chunk, block)
+    grid = (N // chunk,)
+    kern = functools.partial(_kernel, n_workers=n_workers, d_max=d_max, block=block)
+    assign, loads = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec((d_max,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec((1, n_workers), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N,), jnp.int32),
+            jax.ShapeDtypeStruct((N // chunk, n_workers), jnp.float32),
+        ],
+        interpret=interpret,
+    )(keys.astype(jnp.int32), n_cand.astype(jnp.int32), derive_seeds(seed, d_max))
+    return assign, loads

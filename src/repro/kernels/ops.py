@@ -8,12 +8,20 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels.adaptive_route import adaptive_route
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.moe_pkg_dispatch import moe_pkg_dispatch
 from repro.kernels.pkg_route import pkg_route
 from repro.kernels.rmsnorm import rmsnorm
 
-__all__ = ["flash_attention", "moe_pkg_dispatch", "pkg_route", "rmsnorm", "interpret_mode"]
+__all__ = [
+    "adaptive_route",
+    "flash_attention",
+    "moe_pkg_dispatch",
+    "pkg_route",
+    "rmsnorm",
+    "interpret_mode",
+]
 
 
 def interpret_mode() -> bool:

@@ -40,6 +40,37 @@ def ref_pkg_route(keys, n_workers: int, d: int = 2, seed: int = 0,
     return assign.reshape(-1).astype(jnp.int32), loads
 
 
+def ref_adaptive_route(keys, n_cand, n_workers: int, d_max: int = 4,
+                       seed: int = 0, chunk: int = 1024, block: int = 128):
+    """Chunked batch-greedy with per-key candidate counts
+    (matches kernels/adaptive_route.py, including the 1e30 mask sentinel).
+
+    Returns (assign (N,), loads (N//chunk, n_workers))."""
+    N = keys.shape[0]
+    assert N % chunk == 0 and chunk % block == 0
+    cand = hash_choices(keys, n_workers, d=d_max, seed=seed)  # (N, d_max)
+    cand = cand.reshape(N // chunk, chunk // block, block, d_max)
+    nc = n_cand.astype(jnp.int32).reshape(N // chunk, chunk // block, block)
+    col = jnp.arange(d_max, dtype=jnp.int32)
+
+    def chunk_fn(cand_c, nc_c):
+        def step(loads, inp):  # cb (block, d_max), ncb (block,)
+            cb, ncb = inp
+            lc = loads[cb]  # (block, d_max)
+            lc = jnp.where(col[None, :] < ncb[:, None], lc, jnp.float32(1e30))
+            sel = jnp.argmin(lc, axis=-1)
+            choice = jnp.take_along_axis(cb, sel[:, None], axis=-1)[:, 0]
+            hist = jax.nn.one_hot(choice, n_workers, dtype=jnp.float32).sum(0)
+            return loads + hist, choice
+
+        loads0 = jnp.zeros((n_workers,), jnp.float32)
+        loads, choices = lax.scan(step, loads0, (cand_c, nc_c))
+        return choices.reshape(-1), loads
+
+    assign, loads = jax.vmap(chunk_fn)(cand, nc)
+    return assign.reshape(-1).astype(jnp.int32), loads
+
+
 def ref_moe_pkg_dispatch(cand, cgate, n_experts: int, block: int = 256):
     """Sequential block-greedy PoTC over expert candidate pairs.
 

@@ -43,7 +43,8 @@ def compressed_psum_mean(grads, ef, axis_name: str):
 
     Must run inside shard_map.  Returns (mean_grads fp32, new_ef).
     """
-    n = lax.axis_size(axis_name)
+    # jax.lax.axis_size only exists in newer jax; psum(1) is the portable form
+    n = lax.psum(1, axis_name)
 
     def leaf(g, e):
         target = g.astype(jnp.float32) + e

@@ -34,7 +34,8 @@ def pipeline_forward(
     Returns (M, mb, ...) outputs (replicated; produced on the last stage and
     broadcast with a psum).
     """
-    S = lax.axis_size(axis_name)
+    # jax.lax.axis_size only exists in newer jax; psum(1) is the portable form
+    S = lax.psum(1, axis_name)
     sidx = lax.axis_index(axis_name)
     M = x_microbatches.shape[0]
     T = M + S - 1

@@ -1,2 +1,7 @@
-from repro.serving.scheduler import PoTCScheduler, RoundRobinScheduler, KGScheduler
+from repro.serving.scheduler import (
+    KGScheduler,
+    PoTCScheduler,
+    RoundRobinScheduler,
+    WChoicesScheduler,
+)
 from repro.serving.engine import ServeEngine

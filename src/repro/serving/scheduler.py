@@ -8,12 +8,25 @@ balanced under key skew — the serving analogue of key splitting.
 
 Baselines: KGScheduler (sticky hashing — hot sessions overload one replica)
 and RoundRobinScheduler (balanced but 0% cache affinity).
+
+WChoicesScheduler is the W-Choices upgrade (arXiv 1510.05714, DESIGN.md
+SS3.3): a SPACESAVING tracker flags hot session ids online, and hot requests
+may route to ANY replica (global least-loaded) while cold sessions keep the
+d=2 affinity guarantee.  This is the regime where replicas outnumber hot
+sessions and two choices per hot key are no longer enough.
 """
 from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["PoTCScheduler", "KGScheduler", "RoundRobinScheduler"]
+from repro.core.estimation import SpaceSavingTracker, head_threshold
+
+__all__ = [
+    "PoTCScheduler",
+    "KGScheduler",
+    "RoundRobinScheduler",
+    "WChoicesScheduler",
+]
 
 
 def _h32(x: int, seed: int) -> int:
@@ -56,6 +69,32 @@ class KGScheduler:
 
     def complete(self, replica: int, cost: float = 1.0) -> None:
         self.loads[replica] = max(0.0, self.loads[replica] - cost)
+
+
+class WChoicesScheduler(PoTCScheduler):
+    """W-Choices: hot session ids may route to any replica.
+
+    Cold keys behave exactly like PoTCScheduler (d candidates, least loaded
+    wins, <= d replicas per key).  A key becomes hot once its estimated
+    request fraction reaches `theta` (default d/n_replicas, the balanceability
+    limit); from then on it goes to the globally least-loaded replica.
+    """
+
+    def __init__(self, n_replicas: int, d: int = 2, seed: int = 0,
+                 capacity: int = 256, theta: float | None = None,
+                 min_count: int = 8):
+        super().__init__(n_replicas, d=d, seed=seed)
+        self.theta = head_threshold(n_replicas, d) if theta is None else theta
+        self.min_count = min_count
+        self.tracker = SpaceSavingTracker(capacity)
+
+    def route(self, key: int, cost: float = 1.0) -> int:
+        self.tracker.offer(key)
+        if self.tracker.is_head(key, self.theta, min_count=self.min_count):
+            c = int(np.argmin(self.loads))
+            self.loads[c] += cost
+            return c
+        return super().route(key, cost)
 
 
 class RoundRobinScheduler:

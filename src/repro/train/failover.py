@@ -53,27 +53,31 @@ class TrainingHarness:
             start = latest
 
         history = []
-        for step in range(start, target_step):
-            if self.fail_at_step is not None and step == self.fail_at_step:
-                self.fail_at_step = None  # fail exactly once
-                raise SimulatedFailure(f"injected failure at step {step}")
-            batch = next(self.pipeline)
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            params, opt_state, metrics = self.train_step(
-                params, opt_state, batch, jnp.int32(step)
-            )
-            loss = float(metrics["loss"])
-            if not np.isfinite(loss):
-                # NaN guard: restart from the last good checkpoint
-                raise SimulatedFailure(f"non-finite loss at step {step}")
-            history.append(loss)
-            if log_every and (step + 1) % log_every == 0:
-                print(f"step {step+1}: loss={loss:.4f}")
-            if (step + 1) % self.checkpoint_every == 0 or step + 1 == target_step:
-                self.manager.save(
-                    step + 1,
-                    {"params": params, "opt": opt_state, "data": self.pipeline.state()},
-                    blocking=False,
+        try:
+            for step in range(start, target_step):
+                if self.fail_at_step is not None and step == self.fail_at_step:
+                    self.fail_at_step = None  # fail exactly once
+                    raise SimulatedFailure(f"injected failure at step {step}")
+                batch = next(self.pipeline)
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                params, opt_state, metrics = self.train_step(
+                    params, opt_state, batch, jnp.int32(step)
                 )
-        self.manager.wait()
+                loss = float(metrics["loss"])
+                if not np.isfinite(loss):
+                    # NaN guard: restart from the last good checkpoint
+                    raise SimulatedFailure(f"non-finite loss at step {step}")
+                history.append(loss)
+                if log_every and (step + 1) % log_every == 0:
+                    print(f"step {step+1}: loss={loss:.4f}")
+                if (step + 1) % self.checkpoint_every == 0 or step + 1 == target_step:
+                    self.manager.save(
+                        step + 1,
+                        {"params": params, "opt": opt_state, "data": self.pipeline.state()},
+                        blocking=False,
+                    )
+        finally:
+            # A failure must not outrun the async save it will restart from:
+            # commit any in-flight checkpoint before unwinding to the caller.
+            self.manager.wait()
         return params, opt_state, history

@@ -6,6 +6,7 @@ import pytest
 
 from repro.core.streams import zipf_stream
 from repro.kernels import ref
+from repro.kernels.adaptive_route import adaptive_route
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.moe_pkg_dispatch import moe_pkg_dispatch
 from repro.kernels.pkg_route import pkg_route
@@ -28,6 +29,38 @@ def test_pkg_route_chunk_block_sweep(chunk, block):
     a_k, _ = pkg_route(keys, 12, chunk=chunk, block=block)
     a_r, _ = ref.ref_pkg_route(keys, 12, chunk=chunk, block=block)
     np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_r))
+
+
+@pytest.mark.parametrize("n_workers", [16, 50, 100])
+@pytest.mark.parametrize("d_max", [2, 4, 8])
+def test_adaptive_route_matches_ref(n_workers, d_max):
+    keys = jnp.asarray(zipf_stream(4096, 777, 1.6, seed=d_max))
+    nc = jnp.asarray(
+        np.random.default_rng(n_workers).integers(1, d_max + 1, 4096, dtype=np.int32)
+    )
+    a_k, l_k = adaptive_route(keys, nc, n_workers, d_max=d_max)
+    a_r, l_r = ref.ref_adaptive_route(keys, nc, n_workers, d_max=d_max)
+    np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_r))
+    np.testing.assert_array_equal(np.asarray(l_k), np.asarray(l_r))
+
+
+@pytest.mark.parametrize("chunk,block", [(512, 64), (2048, 256), (1024, 1024)])
+def test_adaptive_route_chunk_block_sweep(chunk, block):
+    keys = jnp.asarray(zipf_stream(4096, 333, 1.4, seed=1))
+    nc = jnp.asarray(np.random.default_rng(2).integers(1, 5, 4096, dtype=np.int32))
+    a_k, _ = adaptive_route(keys, nc, 12, d_max=4, chunk=chunk, block=block)
+    a_r, _ = ref.ref_adaptive_route(keys, nc, 12, d_max=4, chunk=chunk, block=block)
+    np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_r))
+
+
+def test_adaptive_route_all_two_choices_is_pkg_route():
+    """n_cand == 2 everywhere reduces to the plain PKG router bit-exactly."""
+    keys = jnp.asarray(zipf_stream(4096, 500, 1.2, seed=3))
+    nc = jnp.full(4096, 2, jnp.int32)
+    a_a, l_a = adaptive_route(keys, nc, 16, d_max=4)
+    a_p, l_p = pkg_route(keys, 16, d=2)
+    np.testing.assert_array_equal(np.asarray(a_a), np.asarray(a_p))
+    np.testing.assert_array_equal(np.asarray(l_a), np.asarray(l_p))
 
 
 @pytest.mark.parametrize("T,k,E,block", [(512, 1, 8, 128), (1024, 2, 16, 256), (2048, 8, 64, 512)])

@@ -1,0 +1,107 @@
+"""Differential partitioner invariants (deterministic; always in tier-1).
+
+Covers the cross-implementation contracts that must hold exactly:
+  (a) pkg_partition_batched(block=1) == pkg_partition, message for message
+  (b) every PKG assignment lies in the key's hash_choices candidate set
+  (c) shuffle imbalance <= 1
+  (d) D-/W-Choices imbalance <= PKG on Zipf z >= 1.5 at n_workers = 100
+plus the adaptive partitioners' tail-key contract: with no head keys they
+reproduce PKG bit-exactly (same candidates, same tie-breaking).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    SCALE_SCENARIOS,
+    SpaceSavingTracker,
+    adaptive_d,
+    d_choices_partition,
+    hash_choices,
+    head_threshold,
+    pkg_partition,
+    pkg_partition_batched,
+    shuffle_partition,
+    w_choices_partition,
+    zipf_stream,
+)
+from repro.core.metrics import final_imbalance_fraction
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("z", [0.8, 1.4])
+def test_batched_block1_equals_sequential(seed, z):
+    """(a) A block of one key is exactly the sequential greedy scan."""
+    keys = jnp.asarray(zipf_stream(3_000, 400, z, seed=seed))
+    a_seq = np.asarray(pkg_partition(keys, 12))
+    a_b1 = np.asarray(pkg_partition_batched(keys, 12, block=1))
+    np.testing.assert_array_equal(a_seq, a_b1)
+
+
+@pytest.mark.parametrize("d", [2, 3, 4])
+@pytest.mark.parametrize("n_workers", [5, 16, 100])
+def test_pkg_assignment_within_candidates(d, n_workers):
+    """(b) PKG only ever routes to one of the key's d hash candidates."""
+    keys = jnp.asarray(zipf_stream(4_000, 600, 1.2, seed=d))
+    a = np.asarray(pkg_partition(keys, n_workers, d=d))
+    cand = np.asarray(hash_choices(keys, n_workers, d=d))
+    assert (a[:, None] == cand).any(axis=1).all()
+
+
+@pytest.mark.parametrize("m,n_workers", [(1, 2), (97, 10), (10_000, 64)])
+def test_shuffle_imbalance_at_most_one(m, n_workers):
+    """(c) Round-robin is perfectly balanced up to integrality."""
+    a = np.asarray(shuffle_partition(jnp.zeros(m, jnp.int32), n_workers))
+    loads = np.bincount(a, minlength=n_workers)
+    assert loads.max() - loads.min() <= 1
+
+
+@pytest.mark.parametrize("name", ["W100_z1.6", "W100_z2.0", "W50_z1.8"])
+def test_adaptive_beats_pkg_on_scale_scenarios(name):
+    """(d) In the large-deployment regime the adaptive variants dominate."""
+    sc = SCALE_SCENARIOS[name]
+    keys = sc.generate(seed=11, scale=0.25)
+    W = sc.n_workers
+    assert sc.head_fraction() > head_threshold(W), "scenario must be PKG-hard"
+    pkg = final_imbalance_fraction(np.asarray(pkg_partition(jnp.asarray(keys), W)), W)
+    dch = final_imbalance_fraction(np.asarray(d_choices_partition(keys, W)), W)
+    wch = final_imbalance_fraction(np.asarray(w_choices_partition(keys, W)), W)
+    assert dch < pkg, (name, dch, pkg)
+    assert wch < pkg, (name, wch, pkg)
+    assert wch < 1e-3, (name, wch)  # head-anywhere restores near-perfection
+
+
+def test_adaptive_equals_pkg_without_head_keys():
+    """Tail keys keep PKG's exact routing: below-threshold streams match."""
+    keys = zipf_stream(20_000, 5_000, 0.5, seed=3)  # p1 << d/W
+    a_pkg = np.asarray(pkg_partition(jnp.asarray(keys), 10))
+    np.testing.assert_array_equal(a_pkg, np.asarray(d_choices_partition(keys, 10)))
+    np.testing.assert_array_equal(a_pkg, np.asarray(w_choices_partition(keys, 10)))
+
+
+def test_d_choices_candidates_extend_pkg_candidates():
+    """d(k) >= 2 candidates always include PKG's two (seed-prefix property)."""
+    keys = jnp.asarray(zipf_stream(1_000, 100, 1.0, seed=0))
+    c2 = np.asarray(hash_choices(keys, 32, d=2))
+    c8 = np.asarray(hash_choices(keys, 32, d=8))
+    np.testing.assert_array_equal(c2, c8[:, :2])
+
+
+def test_space_saving_tracker_finds_true_head():
+    keys = zipf_stream(50_000, 5_000, 1.8, seed=7)
+    tracker = SpaceSavingTracker(capacity=512)
+    tracker.update(keys)
+    counts = np.bincount(keys)
+    true_head = set(np.flatnonzero(counts / len(keys) >= 0.02).tolist())
+    ids, p_hat = tracker.head_keys(0.02)
+    assert true_head <= set(ids.tolist())  # no false negatives
+    # overestimation is bounded by total/capacity
+    for k, p in zip(ids, p_hat):
+        assert p <= counts[k] / len(keys) + 1.0 / 512 + 1e-12
+
+
+def test_adaptive_d_rule():
+    p = np.array([0.001, 0.02, 0.3, 0.9])
+    d = adaptive_d(p, n_workers=100, d_base=2, d_max=16)
+    assert d.tolist() == [2, 4, 16, 16]
+    assert (adaptive_d(p, n_workers=4, d_base=2, d_max=4) <= 4).all()

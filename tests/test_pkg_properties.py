@@ -1,17 +1,28 @@
-"""Hypothesis property tests for the PKG invariants (paper §3.2, §5)."""
+"""Hypothesis property tests for the PKG invariants (paper §3.2, §5).
+
+Requires the `test` extra (pip install -e ".[test]"); the whole module is
+skipped when hypothesis is absent so the tier-1 suite stays green without
+optional deps.
+"""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
-from repro.core import (
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    d_choices_partition,
     hash_choices,
     local_imbalance_bound,
     pkg_partition,
     shuffle_partition,
     simulate_sources,
     source_assignment,
+    w_choices_partition,
     zipf_stream,
 )
+from repro.core.metrics import final_imbalance_fraction, loads_from_assignment  # noqa: E402
 
 keys_strategy = st.integers(min_value=0, max_value=2**31 - 1)
 
@@ -79,3 +90,29 @@ def test_hash_choices_uniform_and_independent_of_order(seed, d):
     counts = np.bincount(c1.reshape(-1), minlength=16)
     expect = 1000 * d / 16
     assert (np.abs(counts - expect) < 5 * np.sqrt(expect) + 10).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=1000),
+    st.sampled_from([1.5, 1.8, 2.0]),
+)
+def test_adaptive_choices_never_worse_than_pkg_at_scale(seed, z):
+    """arXiv 1510.05714: past p1 > d/W, D- and W-Choices dominate PKG."""
+    W = 100
+    keys = zipf_stream(20_000, 2_000, z, seed=seed)
+    pkg = final_imbalance_fraction(np.asarray(pkg_partition(jnp.asarray(keys), W)), W)
+    dch = final_imbalance_fraction(np.asarray(d_choices_partition(keys, W)), W)
+    wch = final_imbalance_fraction(np.asarray(w_choices_partition(keys, W)), W)
+    assert dch <= pkg + 1e-9, (dch, pkg)
+    assert wch <= pkg + 1e-9, (wch, pkg)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=1000))
+def test_adaptive_choices_conserve_and_stay_in_range(seed):
+    keys = zipf_stream(5_000, 500, 1.6, seed=seed)
+    for part in (d_choices_partition, w_choices_partition):
+        a = np.asarray(part(keys, 50))
+        assert a.min() >= 0 and a.max() < 50
+        assert loads_from_assignment(a, 50).sum() == len(keys)

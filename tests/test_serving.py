@@ -1,12 +1,19 @@
-"""Serving layer: PoTC replica scheduler balance + engine generation."""
+"""Serving layer: replica scheduler balance/accounting + engine generation."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config, make_tiny
 from repro.core import zipf_stream
 from repro.models import init_params
-from repro.serving import KGScheduler, PoTCScheduler, RoundRobinScheduler, ServeEngine
+from repro.serving import (
+    KGScheduler,
+    PoTCScheduler,
+    RoundRobinScheduler,
+    ServeEngine,
+    WChoicesScheduler,
+)
 
 
 def _drive(sched, keys, costs):
@@ -38,6 +45,28 @@ def test_potc_bounded_replica_fanout():
     assert max(len(v) for v in seen.values()) <= 2
 
 
+@pytest.mark.parametrize(
+    "make",
+    [PoTCScheduler, KGScheduler, RoundRobinScheduler, WChoicesScheduler],
+    ids=["potc", "kg", "rr", "w_choices"],
+)
+def test_release_completion_accounting(make):
+    """route adds exactly `cost`; complete releases it; never negative."""
+    s = make(4)
+    routed = []
+    for i, cost in enumerate([10.0, 3.5, 1.0, 7.25] * 5):
+        r = s.route(i % 7, cost=cost)
+        assert 0 <= r < 4
+        routed.append((r, cost))
+        assert s.loads.sum() == pytest.approx(sum(c for _, c in routed))
+    for r, cost in routed:
+        s.complete(r, cost=cost)
+    assert s.loads.sum() == pytest.approx(0.0)
+    assert (s.loads >= 0).all()
+    s.complete(0, cost=99.0)  # over-release clamps at zero
+    assert (s.loads >= 0).all()
+
+
 def test_complete_decrements():
     s = PoTCScheduler(4)
     r = s.route(123, cost=10.0)
@@ -50,6 +79,55 @@ def test_round_robin_uniform():
     for i in range(100):
         s.route(i)
     assert s.loads.max() - s.loads.min() <= 1
+
+
+def test_w_choices_balances_past_potc_limit():
+    """One session at p1 > d/W: PoTC saturates two replicas, W-Choices spreads."""
+    n = 16
+    rng = np.random.default_rng(0)
+    # 60% of requests from one hot session id, rest uniform cold sessions
+    keys = np.where(rng.random(20_000) < 0.6, 7, rng.integers(100, 5000, 20_000))
+    potc, wch = PoTCScheduler(n), WChoicesScheduler(n)
+    for k in keys:
+        potc.route(int(k))
+        wch.route(int(k))
+    f_potc = (potc.loads.max() - potc.loads.mean()) / potc.loads.sum()
+    f_wch = (wch.loads.max() - wch.loads.mean()) / wch.loads.sum()
+    assert f_wch < f_potc / 5, (f_wch, f_potc)
+    assert f_wch < 0.01, f_wch
+
+
+def test_w_choices_cold_keys_keep_bounded_fanout():
+    """Cold session ids still land on <= d replicas; hot ids may use many."""
+    sched = WChoicesScheduler(16)
+    rng = np.random.default_rng(1)
+    keys = np.where(rng.random(10_000) < 0.5, 3, rng.integers(10, 500, 10_000))
+    seen: dict[int, set] = {}
+    for k in keys:
+        seen.setdefault(int(k), set()).add(sched.route(int(k)))
+    cold_fanout = max(len(v) for k, v in seen.items() if k != 3)
+    assert cold_fanout <= 2, cold_fanout
+    assert len(seen[3]) > 2  # the hot key did escape its two candidates
+
+
+def test_w_choices_cold_fanout_survives_summary_saturation():
+    """theta < 1/capacity: inherited SPACESAVING error must not fake a hot
+    key, or evicted-and-reinserted cold sessions lose bounded fanout."""
+    sched = WChoicesScheduler(600, capacity=256)  # theta=2/600 < 1/256
+    rng = np.random.default_rng(3)
+    keys = np.where(rng.random(30_000) < 0.3, 42, rng.integers(1000, 6000, 30_000))
+    seen: dict[int, set] = {}
+    for k in keys:
+        seen.setdefault(int(k), set()).add(sched.route(int(k)))
+    assert max(len(v) for k, v in seen.items() if k != 42) <= 2
+    assert len(seen[42]) > 2
+
+
+def test_w_choices_cold_routing_matches_potc():
+    """Before any key crosses the threshold, W-Choices == PoTC decisions."""
+    a, b = PoTCScheduler(8, seed=4), WChoicesScheduler(8, seed=4, theta=0.9)
+    keys = np.random.default_rng(2).integers(0, 1000, 2000)
+    assert [a.route(int(k)) for k in keys] == [b.route(int(k)) for k in keys]
 
 
 def test_engine_greedy_generation():
