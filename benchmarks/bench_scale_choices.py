@@ -6,18 +6,17 @@ exploding past that bound while D-Choices (skew-adaptive d) and W-Choices
 (head keys go anywhere) hold near-perfect balance.  Also verifies that the
 adaptive Pallas kernel matches its JAX oracle bit-exactly in interpret mode.
 
-`PYTHONPATH=src:. python benchmarks/bench_scale_choices.py` emits a JSON
-report; `run(scale)` yields the usual CSV rows for benchmarks/run.py.
+`PYTHONPATH=src:. python benchmarks/bench_scale_choices.py [--scale S]
+[--quick] [--out PATH]` writes the JSON report via the benchmarks/common.py
+convention (default ./BENCH_scale_choices.json, or $BENCH_DIR); `run(scale)`
+yields the usual CSV rows for benchmarks/run.py.
 """
 from __future__ import annotations
-
-import json
-import time
 
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Row, route
+from benchmarks.common import Row, bench_main, route
 from repro.core import SCALE_SCENARIOS, avg_imbalance_fraction
 from repro.core.streams import zipf_stream
 from repro.kernels import adaptive_route, ref
@@ -82,7 +81,4 @@ def run(scale: float = 1.0) -> list[Row]:
 
 
 if __name__ == "__main__":
-    t0 = time.time()
-    report = collect()
-    report["seconds"] = round(time.time() - t0, 2)
-    print(json.dumps(report, indent=2))
+    bench_main("scale_choices", collect)

@@ -1,0 +1,106 @@
+"""Merge bench reports into one BENCH_*.json and gate on imbalance regressions.
+
+CI's bench-quick job runs the JSON benches in --quick mode, merges them here
+into a single BENCH_ci.json artifact (keyed by each report's "bench" field),
+and fails the build when any (bench, scenario, method) imbalance worsens by
+more than --max-ratio vs the committed baseline
+(benchmarks/baselines/BENCH_baseline.json), or when any bench's own
+acceptance checks are false.  Timings (us_per_msg) are machine-dependent and
+never gated.  An absolute floor (--floor) keeps near-zero imbalances (e.g.
+W-Choices at ~1e-5) from tripping the ratio on sampling noise.
+
+Regenerate the baseline after an intentional change:
+
+    PYTHONPATH=src:. python benchmarks/bench_scale_choices.py --quick --out /tmp/s.json
+    PYTHONPATH=src:. python benchmarks/bench_drift.py --quick --out /tmp/d.json
+    python benchmarks/check_regression.py --merge /tmp/s.json /tmp/d.json \
+        --out benchmarks/baselines/BENCH_baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def merge_reports(paths: list[str]) -> dict:
+    merged: dict = {}
+    for p in paths:
+        report = json.loads(Path(p).read_text())
+        merged[report.get("bench", Path(p).stem)] = report
+    return merged
+
+
+def iter_imbalances(merged: dict):
+    """Yield ((bench, scenario, method), value) for every imbalance entry."""
+    for bench, report in merged.items():
+        for scen, entry in report.get("scenarios", {}).items():
+            for method, val in entry.get("imbalance", {}).items():
+                yield (bench, scen, method), float(val)
+
+
+def compare(current: dict, baseline: dict, max_ratio: float, floor: float):
+    base = dict(iter_imbalances(baseline))
+    regressions = []
+    for key, val in iter_imbalances(current):
+        if key not in base:
+            continue  # new scenario/method: no baseline yet, not a regression
+        limit = max(max_ratio * base[key], floor)
+        if val > limit:
+            regressions.append((key, base[key], val, limit))
+    return regressions
+
+
+def failed_checks(merged: dict) -> list[tuple[str, str]]:
+    return [
+        (bench, name)
+        for bench, report in merged.items()
+        for name, ok in report.get("checks", {}).items()
+        if not ok
+    ]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--merge", nargs="+", required=True,
+                    help="bench report JSONs to merge")
+    ap.add_argument("--out", default=None,
+                    help="write the merged report here (e.g. BENCH_ci.json)")
+    ap.add_argument("--baseline", default=None,
+                    help="committed baseline to gate against; omit to skip")
+    ap.add_argument("--max-ratio", type=float, default=2.0,
+                    help="fail when imbalance exceeds ratio x baseline")
+    ap.add_argument("--floor", type=float, default=2e-3,
+                    help="absolute imbalance below which ratios are ignored")
+    args = ap.parse_args(argv)
+
+    merged = merge_reports(args.merge)
+    if args.out:
+        out = Path(args.out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(merged, indent=2, sort_keys=True) + "\n")
+        print(f"merged {len(merged)} report(s) -> {out}")
+
+    rc = 0
+    for bench, name in failed_checks(merged):
+        print(f"CHECK FAILED: {bench}: {name}")
+        rc = 1
+
+    if args.baseline:
+        baseline = json.loads(Path(args.baseline).read_text())
+        regressions = compare(merged, baseline, args.max_ratio, args.floor)
+        for (bench, scen, method), b, v, lim in regressions:
+            print(
+                f"REGRESSION: {bench}/{scen}/{method}: imbalance {v:.4g} "
+                f"> limit {lim:.4g} (baseline {b:.4g} x {args.max_ratio})"
+            )
+            rc = 1
+        if not regressions:
+            n = len(dict(iter_imbalances(merged)))
+            print(f"no regressions across {n} imbalance entries")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

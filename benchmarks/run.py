@@ -12,6 +12,7 @@ import time
 
 from benchmarks import (
     bench_batched_fidelity,
+    bench_drift,
     bench_heavy_hitters,
     bench_fig4,
     bench_fig5,
@@ -42,6 +43,7 @@ MODULES = [
     ("batched_fidelity", bench_batched_fidelity),
     ("kernels", bench_kernels),
     ("scale_choices", bench_scale_choices),
+    ("drift", bench_drift),
 ]
 
 

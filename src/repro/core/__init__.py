@@ -6,6 +6,8 @@ from repro.core.partitioners import (
     hash_partition,
     off_greedy_partition,
     on_greedy_partition,
+    online_d_choices_partition,
+    online_w_choices_partition,
     pkg_partition,
     pkg_partition_batched,
     potc_static_partition,
@@ -13,10 +15,19 @@ from repro.core.partitioners import (
     w_choices_partition,
 )
 from repro.core.estimation import (
+    OnlineSS,
     SpaceSavingTracker,
     adaptive_d,
+    adaptive_d_counts,
+    head_test,
     head_threshold,
     local_imbalance_bound,
+    online_head_tables,
+    online_ss_decay,
+    online_ss_estimate,
+    online_ss_from_tracker,
+    online_ss_init,
+    online_ss_update,
     simulate_sources,
     source_assignment,
 )
@@ -30,14 +41,18 @@ from repro.core.metrics import (
     loads_from_assignment,
 )
 from repro.core.streams import (
+    DRIFT_SCENARIOS,
     PAPER_DATASETS,
     SCALE_SCENARIOS,
+    DriftScenario,
     ScaleScenario,
     StreamSpec,
+    abrupt_shift_stream,
     drift_stream,
     graph_edge_stream,
     lognormal_stream,
     matched_trace_stream,
+    multi_tenant_stream,
     uniform_stream,
     zipf_probs,
     zipf_stream,

@@ -18,11 +18,18 @@ Two kinds of estimators live here:
    keys of the stream in O(capacity) space; head_threshold / adaptive_d
    encode the head/tail rule and the skew-adaptive choice count d(k)
    (DESIGN.md SS3.3).
+
+3. The *online* estimator (DESIGN.md SS3.3 "Online estimation"): the same
+   SPACESAVING summary as flat JAX arrays (OnlineSS) with pure per-element
+   update/decay transitions, so the tracker rides inside a partitioner's
+   lax.scan carry and head detection happens per message with no pre-pass.
+   adaptive_d_counts is the integer-exact d(k) rule shared by the offline
+   pre-pass and the scan so both paths make bit-identical decisions.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,8 +44,17 @@ __all__ = [
     "source_assignment",
     "local_imbalance_bound",
     "SpaceSavingTracker",
+    "head_test",
     "head_threshold",
     "adaptive_d",
+    "adaptive_d_counts",
+    "OnlineSS",
+    "online_ss_init",
+    "online_ss_update",
+    "online_ss_decay",
+    "online_ss_estimate",
+    "online_ss_from_tracker",
+    "online_head_tables",
 ]
 
 
@@ -145,6 +161,24 @@ def local_imbalance_bound(
     return float(gi), float(li)
 
 
+def head_test(count, total, theta: float, min_count: int = 1):
+    """THE canonical head predicate: count/total >= theta, evaluated as
+    float32(count) >= float32(theta) * float32(max(total, 1)), plus a
+    min_count observation floor.  Every consumer — the offline pre-pass
+    (numpy), the online scan carry and the per-block head tables (jnp) —
+    must use this exact arithmetic: float32 on both paths is what keeps the
+    frozen-carry online variants bit-identical to the offline ones even on
+    theta-boundary counts (numpy and XLA f32 multiply/compare are both IEEE).
+    """
+    if isinstance(count, (np.ndarray, np.integer, int)):
+        tot = np.float32(max(int(total), 1))
+        frac_ok = np.float32(count) >= np.float32(theta) * tot
+        return np.logical_and(np.asarray(count) >= min_count, frac_ok)
+    tot = jnp.maximum(total, 1).astype(jnp.float32)
+    frac_ok = count.astype(jnp.float32) >= jnp.float32(theta) * tot
+    return (count >= min_count) & frac_ok
+
+
 def head_threshold(n_workers: int, d: int = 2) -> float:
     """Head/tail frequency cut (DESIGN.md SS3.3).
 
@@ -170,6 +204,40 @@ def adaptive_d(
     """
     need = np.ceil(slack * np.asarray(p_hat, np.float64) * n_workers)
     return np.clip(need, d_base, d_max).astype(np.int32)
+
+
+def adaptive_d_counts(
+    counts,
+    total,
+    n_workers: int,
+    d_base: int = 2,
+    d_max: int = 16,
+    slack: float = 2.0,
+):
+    """Integer-exact D-Choices rule on raw (count, total) pairs.
+
+    Same rule as adaptive_d — d(k) = clip(ceil(slack * p * W), d_base, d_max)
+    with p = count/total — but evaluated in integer arithmetic with slack as
+    the rational s_num/s_den (limit_denominator(256): exact for the dyadic
+    slacks used in practice), so the offline
+    pre-pass (numpy int64) and the scan-carry online path (jnp int32) land on
+    the same d(k) even when slack*p*W sits exactly on a ceil boundary, where
+    float rounding would otherwise split them.  Works on numpy and jnp inputs;
+    int32 callers need slack_num * n_workers * count < 2**31.
+    """
+    from fractions import Fraction
+
+    frac = Fraction(float(slack)).limit_denominator(256)
+    s_num, s_den = frac.numerator, frac.denominator
+    if isinstance(counts, (np.ndarray, np.integer, int)):
+        num = np.int64(s_num * n_workers) * np.asarray(counts, np.int64)
+        den = np.int64(s_den) * np.int64(total)
+        need = -((-num) // max(int(den), 1))
+        return np.clip(need, d_base, d_max).astype(np.int32)
+    num = jnp.int32(s_num * n_workers) * counts
+    den = jnp.int32(s_den) * total
+    need = -((-num) // jnp.maximum(den, 1))  # ceil-div, defined at total=0
+    return jnp.clip(need, d_base, d_max).astype(jnp.int32)
 
 
 class SpaceSavingTracker:
@@ -222,6 +290,44 @@ class SpaceSavingTracker:
             and self.guaranteed_count(key) >= theta * self.total
         )
 
+    def decay(self, factor: float = 0.5) -> None:
+        """Windowed/decayed mode: scale every counter (and the running total)
+        by `factor`, dropping entries that reach zero.  Calling this every
+        `period` messages makes the summary an exponentially-decayed window
+        with half-life period/log2(1/factor) messages, so theta-relative head
+        detection follows a rotating head set instead of averaging over the
+        whole history (DESIGN.md SS3.3)."""
+        ss = self._ss
+        for k in list(ss.counts):
+            c = int(ss.counts[k] * factor)
+            if c <= 0:
+                del ss.counts[k]
+                del ss.errors[k]
+            else:
+                ss.counts[k] = c
+                ss.errors[k] = int(ss.errors[k] * factor)
+        self.total = int(self.total * factor)
+
+    def head_counts(
+        self, theta: float, min_count: int = 1
+    ) -> tuple[np.ndarray, np.ndarray, int]:
+        """head_keys on raw integer counts: (ids sorted, counts aligned, total).
+
+        This is what the integer-exact adaptive_d_counts rule consumes; the
+        predicate is the canonical head_test (float32 + min_count floor), so
+        the offline pre-pass and the scan-carry online path agree bit-for-bit.
+        """
+        if self.total == 0:
+            return np.empty(0, np.int64), np.empty(0, np.int64), 0
+        items = sorted(
+            (k, c)
+            for k, c in self._ss.counts.items()
+            if bool(head_test(c, self.total, theta, min_count))
+        )
+        ids = np.asarray([k for k, _ in items], np.int64)
+        cnt = np.asarray([c for _, c in items], np.int64)
+        return ids, cnt, self.total
+
     def head_keys(self, theta: float) -> tuple[np.ndarray, np.ndarray]:
         """All tracked keys with estimated frequency fraction >= theta.
 
@@ -238,3 +344,161 @@ class SpaceSavingTracker:
         ids = np.asarray([k for k, _ in items], np.int64)
         p = np.asarray([p for _, p in items], np.float64)
         return ids, p
+
+
+# ---------------------------------------------------------------------------
+# Online (scan-carry) SPACESAVING — DESIGN.md SS3.3 "Online estimation".
+# ---------------------------------------------------------------------------
+
+
+class OnlineSS(NamedTuple):
+    """SPACESAVING summary as flat arrays, carried through lax.scan.
+
+    keys   (C,) int32  slot key ids; a slot is live iff counts > 0
+    counts (C,) int32  estimated counts (upper bounds)
+    errors (C,) int32  inherited over-estimation per slot
+    total  ()   int32  messages observed (decayed total in windowed mode)
+    """
+
+    keys: jnp.ndarray
+    counts: jnp.ndarray
+    errors: jnp.ndarray
+    total: jnp.ndarray
+
+
+def online_ss_init(capacity: int) -> OnlineSS:
+    return OnlineSS(
+        keys=jnp.full((capacity,), -1, jnp.int32),
+        counts=jnp.zeros((capacity,), jnp.int32),
+        errors=jnp.zeros((capacity,), jnp.int32),
+        total=jnp.int32(0),
+    )
+
+
+def online_ss_update(state: OnlineSS, key, weight=1) -> OnlineSS:
+    """One SPACESAVING offer as a pure array transition (jit/scan safe).
+
+    Mirrors applications.SpaceSaving.offer: tracked key -> increment; untracked
+    key -> evict the minimum-count slot (an empty slot is a zero-count victim,
+    so fill-then-evict needs no separate branch), inheriting its count as the
+    new entry's error.  O(capacity) vector ops per element.
+    """
+    k = jnp.asarray(key, jnp.int32)
+    w = jnp.asarray(weight, jnp.int32)
+    live = state.counts > 0
+    match = live & (state.keys == k)
+    found = match.any()
+    slot = jnp.where(found, jnp.argmax(match), jnp.argmin(state.counts))
+    c_slot = state.counts[slot]
+    # found: count+w, same error; miss: victim_count + w, error = victim_count
+    new_count = c_slot + w
+    new_error = jnp.where(found, state.errors[slot], c_slot)
+    return OnlineSS(
+        keys=state.keys.at[slot].set(k),
+        counts=state.counts.at[slot].set(new_count),
+        errors=state.errors.at[slot].set(new_error),
+        total=state.total + w,
+    )
+
+
+def online_ss_decay(state: OnlineSS, shift: int = 1) -> OnlineSS:
+    """Halve all counters `shift` times (integer floor) plus the total.
+
+    Applied every `decay_period` messages this turns the summary into an
+    exponentially-decayed window (half-life ~ decay_period messages for
+    shift=1); slots whose count reaches zero free themselves because liveness
+    is counts > 0.  Floor halving keeps the invariant errors <= counts.
+    """
+    return OnlineSS(
+        keys=state.keys,
+        counts=state.counts >> shift,
+        errors=state.errors >> shift,
+        total=state.total >> shift,
+    )
+
+
+def online_ss_estimate(state: OnlineSS, key) -> jnp.ndarray:
+    """Estimated count of `key` (0 if untracked) — upper bound as in offline."""
+    k = jnp.asarray(key, jnp.int32)
+    match = (state.counts > 0) & (state.keys == k)
+    return jnp.where(match, state.counts, 0).max()
+
+
+def online_ss_from_tracker(tracker: SpaceSavingTracker, capacity: int) -> OnlineSS:
+    """Warm-start an OnlineSS from a Python-side tracker (top-`capacity`)."""
+    items = tracker._ss.counts
+    top = sorted(items, key=items.get, reverse=True)[:capacity]  # type: ignore[arg-type]
+    state = online_ss_init(capacity)
+    n = len(top)
+    if n == 0:
+        return state._replace(total=jnp.int32(tracker.total))
+    return OnlineSS(
+        keys=state.keys.at[:n].set(jnp.asarray(top, jnp.int32)),
+        counts=state.counts.at[:n].set(
+            jnp.asarray([items[k] for k in top], jnp.int32)
+        ),
+        errors=state.errors.at[:n].set(
+            jnp.asarray([tracker._ss.errors[k] for k in top], jnp.int32)
+        ),
+        total=jnp.int32(tracker.total),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "block", "capacity", "n_workers", "d", "d_max", "theta", "slack",
+        "min_count", "decay_period",
+    ),
+)
+def online_head_tables(
+    keys: jnp.ndarray,
+    block: int,
+    capacity: int,
+    n_workers: int,
+    d: int = 2,
+    d_max: int = 16,
+    theta: Optional[float] = None,
+    slack: float = 2.0,
+    min_count: int = 8,
+    decay_period: int = 0,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-vector-block head tables for the Pallas adaptive router.
+
+    Runs the online tracker over `keys` (N, divisible by block) and emits, for
+    every block b, the summary state *before* consuming block b — so a router
+    reading table b sees head decisions stale by at most `block` messages,
+    mirroring pkg_partition_batched's stale-loads contract (DESIGN.md SS2).
+
+    Returns (tbl_keys (N/block, capacity) int32, tbl_ncand same shape): slot
+    ncand is the integer-exact d(k) for head slots and `d` otherwise, so a
+    lookup miss and a tail hit are indistinguishable — both route as PKG.
+    """
+    theta_f = head_threshold(n_workers, d) if theta is None else float(theta)
+    N = keys.shape[0]
+    assert N % block == 0, (N, block)
+    kb = keys.astype(jnp.int32).reshape(N // block, block)
+    t_idx = jnp.arange(N // block, dtype=jnp.int32)
+
+    def emit(state: OnlineSS):
+        is_head = head_test(state.counts, state.total, theta_f, min_count)
+        dk = adaptive_d_counts(
+            state.counts, state.total, n_workers, d_base=d, d_max=d_max, slack=slack
+        )
+        return state.keys, jnp.where(is_head, dk, d).astype(jnp.int32)
+
+    def step(state, inp):
+        blk, b = inp
+        out = emit(state)
+        if decay_period > 0:
+            do = (b * block) % decay_period < block  # crossed a period boundary
+            state = lax.cond(
+                (b > 0) & do, lambda s: online_ss_decay(s), lambda s: s, state
+            )
+        state = lax.scan(lambda s, k: (online_ss_update(s, k), None), state, blk)[0]
+        return state, out
+
+    _, (tbl_keys, tbl_ncand) = lax.scan(
+        step, online_ss_init(capacity), (kb, t_idx)
+    )
+    return tbl_keys, tbl_ncand

@@ -20,12 +20,16 @@ __all__ = [
     "lognormal_stream",
     "matched_trace_stream",
     "drift_stream",
+    "abrupt_shift_stream",
+    "multi_tenant_stream",
     "graph_edge_stream",
     "uniform_stream",
     "StreamSpec",
     "PAPER_DATASETS",
     "ScaleScenario",
     "SCALE_SCENARIOS",
+    "DriftScenario",
+    "DRIFT_SCENARIOS",
 ]
 
 
@@ -97,27 +101,124 @@ def drift_stream(
     n_epochs: int = 8,
     rotate_top: int = 32,
     seed: int = 0,
+    half_life: Optional[int] = None,
+    slice_msgs: int = 512,
 ) -> np.ndarray:
-    """CT-style drifting skew: the identity of the hottest keys rotates per epoch.
+    """Drifting skew: the identity of the hottest keys churns over time.
 
-    Emulates Fig. 3 of the paper (weekly cashtag popularity shifts): within each
-    epoch the stream is Zipf(z), but the rank->key mapping of the top
-    `rotate_top` keys is re-permuted every epoch.
+    Two modes, both Zipf(z) at every instant:
+
+    - **Epoch rotation** (default, half_life=None): CT-style — emulates Fig. 3
+      of the paper (weekly cashtag popularity shifts).  The rank->key mapping
+      of the top `rotate_top` keys is re-permuted every n_msgs/n_epochs
+      messages.
+    - **Half-life churn** (half_life=H messages): continuous drift — every
+      `slice_msgs` messages each of the top `rotate_top` rank identities is
+      independently replaced with probability 1 - 2**(-slice_msgs/H), so after
+      H messages about half the head set has turned over.  This is the regime
+      where an offline (whole-stream) head estimate dilutes each hot key's
+      average frequency below theta while its *instantaneous* frequency stays
+      far above it — exactly what the online tracker exists for.
     """
     rng = np.random.default_rng(seed)
-    per = n_msgs // n_epochs
+    probs = zipf_probs(n_keys, z)
     out = np.empty(n_msgs, dtype=np.int32)
     base = np.arange(n_keys, dtype=np.int32)
+    rotate_top = min(rotate_top, n_keys)
+
+    if half_life is None:
+        per = max(n_msgs // n_epochs, 1)
+        for e in range(n_epochs):
+            mapping = base.copy()
+            top = rng.permutation(n_keys)[:rotate_top].astype(np.int32)
+            mapping[:rotate_top] = top
+            lo = e * per
+            if lo >= n_msgs:
+                break
+            hi = n_msgs if e == n_epochs - 1 else min((e + 1) * per, n_msgs)
+            ranks = _sample_from_probs(probs, hi - lo, rng)
+            out[lo:hi] = mapping[ranks]
+        return out
+
+    p_flip = 1.0 - 2.0 ** (-slice_msgs / float(half_life))
+    mapping = base.copy()
+    top = rng.permutation(n_keys)[:rotate_top].astype(np.int32)
+    mapping[:rotate_top] = top
+    in_top = set(int(k) for k in top)
+    for lo in range(0, n_msgs, slice_msgs):
+        hi = min(lo + slice_msgs, n_msgs)
+        ranks = _sample_from_probs(probs, hi - lo, rng)
+        out[lo:hi] = mapping[ranks]
+        flips = np.flatnonzero(rng.random(rotate_top) < p_flip)
+        for r in flips:
+            in_top.discard(int(mapping[r]))
+            k = int(rng.integers(n_keys))
+            while k in in_top:  # keep head identities distinct
+                k = int(rng.integers(n_keys))
+            in_top.add(k)
+            mapping[r] = k
+    return out
+
+
+def abrupt_shift_stream(
+    n_msgs: int,
+    n_keys: int,
+    z: float,
+    n_shifts: int = 3,
+    seed: int = 0,
+) -> np.ndarray:
+    """Abrupt regime changes: the *entire* rank->key mapping is redrawn at
+    each of `n_shifts` evenly-spaced shift points (n_shifts+1 regimes), so
+    the old head set carries zero information about the new one — the
+    hardest case for any estimator with memory.
+    """
+    rng = np.random.default_rng(seed)
     probs = zipf_probs(n_keys, z)
-    for e in range(n_epochs):
-        mapping = base.copy()
-        top = rng.permutation(n_keys)[:rotate_top].astype(np.int32)
-        mapping[:rotate_top] = top
+    out = np.empty(n_msgs, dtype=np.int32)
+    n_regimes = n_shifts + 1
+    per = max(n_msgs // n_regimes, 1)
+    for e in range(n_regimes):
+        mapping = rng.permutation(n_keys).astype(np.int32)
         lo = e * per
-        hi = n_msgs if e == n_epochs - 1 else (e + 1) * per
+        if lo >= n_msgs:
+            break
+        hi = n_msgs if e == n_regimes - 1 else min((e + 1) * per, n_msgs)
         ranks = _sample_from_probs(probs, hi - lo, rng)
         out[lo:hi] = mapping[ranks]
     return out
+
+
+def multi_tenant_stream(
+    n_msgs: int,
+    n_tenants: int = 4,
+    n_keys: int = 2_000,
+    z: float = 1.6,
+    weights: Optional[np.ndarray] = None,
+    half_life: Optional[int] = None,
+    seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Interleaved tenants over disjoint key ranges (tenant t owns
+    [t*n_keys, (t+1)*n_keys)), each an independent Zipf(z) — optionally with
+    per-tenant half-life churn.  `weights` skews traffic share across tenants
+    (default uniform).  Returns (keys, tenant_id), both (n_msgs,) int32.
+    """
+    rng = np.random.default_rng(seed)
+    w = np.full(n_tenants, 1.0 / n_tenants) if weights is None else (
+        np.asarray(weights, np.float64) / np.sum(weights)
+    )
+    tenant = _sample_from_probs(w, n_msgs, rng)
+    keys = np.empty(n_msgs, dtype=np.int32)
+    for t in range(n_tenants):
+        idx = np.flatnonzero(tenant == t)
+        if half_life is None:
+            sub = zipf_stream(len(idx), n_keys, z, seed=seed + 101 * (t + 1))
+        else:
+            sub = drift_stream(
+                len(idx), n_keys, z, seed=seed + 101 * (t + 1),
+                half_life=half_life,
+            )
+        keys[idx] = sub + t * n_keys
+    return keys, tenant.astype(np.int32)
 
 
 def graph_edge_stream(
@@ -201,6 +302,69 @@ SCALE_SCENARIOS = {
         ScaleScenario(f"W{w}_z{z:.1f}", n_workers=w, z=z)
         for w in (50, 100)
         for z in (1.4, 1.6, 1.8, 2.0)
+    )
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftScenario:
+    """A named drifting-head-set workload for the online-vs-offline benches.
+
+    kind: "stationary" (plain Zipf), "churn" (half-life head churn),
+    "abrupt" (full rank remaps), or "multi_tenant" (interleaved churned
+    tenants).  half_life is in messages and scales with the stream so the
+    *number of head turnovers* is scale-invariant.
+    """
+
+    name: str
+    kind: str = "churn"
+    n_workers: int = 100
+    z: float = 1.8
+    n_msgs: int = 100_000
+    n_keys: int = 5_000
+    half_life: Optional[int] = None  # fraction handled via half_life_frac
+    half_life_frac: Optional[float] = None  # half-life as fraction of n_msgs
+    rotate_top: int = 32
+    n_shifts: int = 3
+    n_tenants: int = 4
+
+    def generate(self, seed: int = 0, scale: float = 1.0) -> np.ndarray:
+        m = max(int(self.n_msgs * scale), 2_000)
+        hl = self.half_life
+        if hl is None and self.half_life_frac is not None:
+            hl = max(int(m * self.half_life_frac), 1)
+        if self.kind == "stationary":
+            return zipf_stream(m, self.n_keys, self.z, seed=seed)
+        if self.kind == "churn":
+            return drift_stream(
+                m, self.n_keys, self.z, rotate_top=self.rotate_top,
+                seed=seed, half_life=hl,
+            )
+        if self.kind == "abrupt":
+            return abrupt_shift_stream(
+                m, self.n_keys, self.z, n_shifts=self.n_shifts, seed=seed
+            )
+        if self.kind == "multi_tenant":
+            keys, _ = multi_tenant_stream(
+                m, n_tenants=self.n_tenants,
+                n_keys=self.n_keys // self.n_tenants, z=self.z,
+                half_life=hl, seed=seed,
+            )
+            return keys
+        raise ValueError(self.kind)
+
+
+# Drift-rate sweep at W=100 (the PKG-hard regime) + structural variants; the
+# churn half-lives are fractions of the stream so --scale preserves drift rate.
+DRIFT_SCENARIOS = {
+    s.name: s
+    for s in (
+        DriftScenario("stationary", kind="stationary"),
+        DriftScenario("churn_hl32", kind="churn", half_life_frac=1 / 32),
+        DriftScenario("churn_hl8", kind="churn", half_life_frac=1 / 8),
+        DriftScenario("churn_hl2", kind="churn", half_life_frac=1 / 2),
+        DriftScenario("abrupt_x3", kind="abrupt", n_shifts=3),
+        DriftScenario("multi_tenant", kind="multi_tenant", half_life_frac=1 / 8),
     )
 }
 

@@ -4,6 +4,7 @@ interpret mode (correctness); on TPU they compile natively."""
 from repro.kernels import ref
 from repro.kernels.ops import (
     adaptive_route,
+    adaptive_route_online,
     flash_attention,
     interpret_mode,
     moe_pkg_dispatch,

@@ -30,32 +30,46 @@ from repro.core.hashing import derive_seeds, splitmix32
 # same literal so kernel and oracle stay bit-identical.
 
 
+def _route_block(kb, nc, seeds, loads, *, n_workers, d_max, block):
+    """The shared masked-greedy routing core for one vector block.
+
+    kb (V,) int32 keys, nc (V,) int32 candidate counts, loads (1, n) f32.
+    Returns (choice (V,) int32, new loads).  Both kernels call this — the
+    per-key-ncand and the head-table variants differ ONLY in how nc is
+    produced — so sentinel/tie-break/update semantics cannot drift apart.
+    """
+    wid = jnp.arange(n_workers, dtype=jnp.int32)
+    col = jnp.arange(d_max, dtype=jnp.int32)
+    h = splitmix32(kb.astype(jnp.uint32)[:, None] ^ seeds[None, :])  # (V, d_max)
+    cand = (h % jnp.uint32(n_workers)).astype(jnp.int32)  # (V, d_max)
+    onehot_c = (cand[..., None] == wid).astype(jnp.float32)  # (V, d_max, n)
+    lc = jax.lax.dot_general(
+        onehot_c.reshape(block * d_max, n_workers),
+        loads.reshape(n_workers, 1),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(block, d_max)
+    lc = jnp.where(col[None, :] < nc[:, None], lc, 1e30)
+    sel = jnp.argmin(lc, axis=-1)  # (V,)
+    choice = jnp.take_along_axis(cand, sel[:, None], axis=-1)[:, 0]
+    hist = (choice[:, None] == wid).astype(jnp.float32).sum(axis=0)
+    return choice, loads + hist[None, :]
+
+
 def _kernel(keys_ref, ncand_ref, seeds_ref, assign_ref, loads_ref, *,
             n_workers, d_max, block):
     chunk = keys_ref.shape[0]
     nblk = chunk // block
     seeds = seeds_ref[...]  # (d_max,) uint32
-    wid = jnp.arange(n_workers, dtype=jnp.int32)
-    col = jnp.arange(d_max, dtype=jnp.int32)
 
     def body(i, loads):  # loads (1, n_workers) f32
-        kb = keys_ref[pl.ds(i * block, block)].astype(jnp.uint32)  # (V,)
+        kb = keys_ref[pl.ds(i * block, block)]  # (V,)
         nc = ncand_ref[pl.ds(i * block, block)]  # (V,)
-        h = splitmix32(kb[:, None] ^ seeds[None, :])  # (V, d_max)
-        cand = (h % jnp.uint32(n_workers)).astype(jnp.int32)  # (V, d_max)
-        onehot_c = (cand[..., None] == wid).astype(jnp.float32)  # (V, d_max, n)
-        lc = jax.lax.dot_general(
-            onehot_c.reshape(block * d_max, n_workers),
-            loads.reshape(n_workers, 1),
-            (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        ).reshape(block, d_max)
-        lc = jnp.where(col[None, :] < nc[:, None], lc, 1e30)
-        sel = jnp.argmin(lc, axis=-1)  # (V,)
-        choice = jnp.take_along_axis(cand, sel[:, None], axis=-1)[:, 0]
+        choice, loads = _route_block(
+            kb, nc, seeds, loads, n_workers=n_workers, d_max=d_max, block=block
+        )
         assign_ref[pl.ds(i * block, block)] = choice
-        hist = (choice[:, None] == wid).astype(jnp.float32).sum(axis=0)
-        return loads + hist[None, :]
+        return loads
 
     loads = lax.fori_loop(0, nblk, body, jnp.zeros((1, n_workers), jnp.float32))
     loads_ref[...] = loads
@@ -102,4 +116,109 @@ def adaptive_route(
         ],
         interpret=interpret,
     )(keys.astype(jnp.int32), n_cand.astype(jnp.int32), derive_seeds(seed, d_max))
+    return assign, loads
+
+
+# ---------------------------------------------------------------------------
+# Online variant: head table refreshed between vector blocks (DESIGN.md SS3.3
+# "Online estimation").  The tracker itself runs upstream
+# (core.estimation.online_head_tables, one lax.scan over blocks); the kernel
+# consumes its per-block snapshots as a device-resident operand — table b is
+# the summary state *before* block b, so head verdicts are stale by at most
+# `block` messages, the same contract as the stale loads of
+# pkg_partition_batched.  In-kernel the lookup is a (V, H) equality compare +
+# masked max (VPU only, no gather): a miss or a tail hit both yield d_base
+# candidates, i.e. exact PKG routing.
+# ---------------------------------------------------------------------------
+
+
+def _head_table_ncand(kb, tk, tn, d_base, d_max):
+    """Per-lane candidate count from a head-table snapshot: (V, H) equality
+    compare + masked max (no gather); a miss or a tail hit yields d_base."""
+    hit = kb[:, None] == tk[None, :]  # (V, H)
+    nc = jnp.max(jnp.where(hit, tn, 0), axis=1)  # (V,) 0 on miss
+    return jnp.clip(jnp.where(nc > 0, nc, d_base), d_base, d_max)
+
+
+def _kernel_online(keys_ref, tblk_ref, tbln_ref, seeds_ref, assign_ref,
+                   loads_ref, *, n_workers, d_base, d_max, block):
+    chunk = keys_ref.shape[0]
+    nblk = chunk // block
+    seeds = seeds_ref[...]  # (d_max,) uint32
+    H = tblk_ref.shape[1]
+
+    def body(i, loads):  # loads (1, n_workers) f32
+        kb = keys_ref[pl.ds(i * block, block)]  # (V,) int32
+        tk = tblk_ref[pl.ds(i, 1), :].reshape(H)  # (H,) int32 head-table keys
+        tn = tbln_ref[pl.ds(i, 1), :].reshape(H)  # (H,) int32 head-table d(k)
+        nc = _head_table_ncand(kb, tk, tn, d_base, d_max)
+        choice, loads = _route_block(
+            kb, nc, seeds, loads, n_workers=n_workers, d_max=d_max, block=block
+        )
+        assign_ref[pl.ds(i * block, block)] = choice
+        return loads
+
+    loads = lax.fori_loop(0, nblk, body, jnp.zeros((1, n_workers), jnp.float32))
+    loads_ref[...] = loads
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n_workers", "d_base", "d_max", "seed", "chunk", "block", "interpret"
+    ),
+)
+def adaptive_route_online(
+    keys: jnp.ndarray,
+    tbl_keys: jnp.ndarray,
+    tbl_ncand: jnp.ndarray,
+    n_workers: int,
+    d_base: int = 2,
+    d_max: int = 8,
+    seed: int = 0,
+    chunk: int = 1024,
+    block: int = 128,
+    interpret: bool = True,
+):
+    """Route keys (N,) against per-block head tables (N/block, H).
+
+    tbl_keys/tbl_ncand come from core.estimation.online_head_tables(block=...)
+    with the same `block`; H is the tracker capacity.  Keys absent from their
+    block's table (or present with ncand == d_base) route exactly as PKG.
+    Returns (assign (N,), per-chunk loads (N/chunk, n_workers)).
+    """
+    N = keys.shape[0]
+    H = tbl_keys.shape[1]
+    assert N % chunk == 0 and chunk % block == 0, (N, chunk, block)
+    assert tbl_keys.shape == (N // block, H) == tbl_ncand.shape
+    grid = (N // chunk,)
+    kern = functools.partial(
+        _kernel_online, n_workers=n_workers, d_base=d_base, d_max=d_max,
+        block=block,
+    )
+    blocks_per_chunk = chunk // block
+    assign, loads = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec((blocks_per_chunk, H), lambda i: (i, 0)),
+            pl.BlockSpec((blocks_per_chunk, H), lambda i: (i, 0)),
+            pl.BlockSpec((d_max,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec((1, n_workers), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N,), jnp.int32),
+            jax.ShapeDtypeStruct((N // chunk, n_workers), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        keys.astype(jnp.int32),
+        tbl_keys.astype(jnp.int32),
+        tbl_ncand.astype(jnp.int32),
+        derive_seeds(seed, d_max),
+    )
     return assign, loads

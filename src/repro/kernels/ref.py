@@ -40,6 +40,18 @@ def ref_pkg_route(keys, n_workers: int, d: int = 2, seed: int = 0,
     return assign.reshape(-1).astype(jnp.int32), loads
 
 
+def _masked_block_step(loads, cb, ncb, n_workers: int, d_max: int):
+    """One vector block of the masked batch-greedy: the shared oracle core
+    for both adaptive routers (1e30 sentinel, first-index tie-break)."""
+    col = jnp.arange(d_max, dtype=jnp.int32)
+    lc = loads[cb]  # (block, d_max)
+    lc = jnp.where(col[None, :] < ncb[:, None], lc, jnp.float32(1e30))
+    sel = jnp.argmin(lc, axis=-1)
+    choice = jnp.take_along_axis(cb, sel[:, None], axis=-1)[:, 0]
+    hist = jax.nn.one_hot(choice, n_workers, dtype=jnp.float32).sum(0)
+    return loads + hist, choice
+
+
 def ref_adaptive_route(keys, n_cand, n_workers: int, d_max: int = 4,
                        seed: int = 0, chunk: int = 1024, block: int = 128):
     """Chunked batch-greedy with per-key candidate counts
@@ -51,23 +63,51 @@ def ref_adaptive_route(keys, n_cand, n_workers: int, d_max: int = 4,
     cand = hash_choices(keys, n_workers, d=d_max, seed=seed)  # (N, d_max)
     cand = cand.reshape(N // chunk, chunk // block, block, d_max)
     nc = n_cand.astype(jnp.int32).reshape(N // chunk, chunk // block, block)
-    col = jnp.arange(d_max, dtype=jnp.int32)
 
     def chunk_fn(cand_c, nc_c):
         def step(loads, inp):  # cb (block, d_max), ncb (block,)
             cb, ncb = inp
-            lc = loads[cb]  # (block, d_max)
-            lc = jnp.where(col[None, :] < ncb[:, None], lc, jnp.float32(1e30))
-            sel = jnp.argmin(lc, axis=-1)
-            choice = jnp.take_along_axis(cb, sel[:, None], axis=-1)[:, 0]
-            hist = jax.nn.one_hot(choice, n_workers, dtype=jnp.float32).sum(0)
-            return loads + hist, choice
+            return _masked_block_step(loads, cb, ncb, n_workers, d_max)
 
         loads0 = jnp.zeros((n_workers,), jnp.float32)
         loads, choices = lax.scan(step, loads0, (cand_c, nc_c))
         return choices.reshape(-1), loads
 
     assign, loads = jax.vmap(chunk_fn)(cand, nc)
+    return assign.reshape(-1).astype(jnp.int32), loads
+
+
+def ref_adaptive_route_online(keys, tbl_keys, tbl_ncand, n_workers: int,
+                              d_base: int = 2, d_max: int = 8, seed: int = 0,
+                              chunk: int = 1024, block: int = 128):
+    """Chunked batch-greedy against per-block head tables
+    (matches kernels/adaptive_route.py::adaptive_route_online; the table
+    lookup is literally the kernel's _head_table_ncand and the greedy core
+    is the shared _masked_block_step).
+
+    Returns (assign (N,), loads (N//chunk, n_workers))."""
+    from repro.kernels.adaptive_route import _head_table_ncand
+
+    N = keys.shape[0]
+    H = tbl_keys.shape[1]
+    assert N % chunk == 0 and chunk % block == 0
+    cand = hash_choices(keys, n_workers, d=d_max, seed=seed)  # (N, d_max)
+    cand = cand.reshape(N // chunk, chunk // block, block, d_max)
+    kb = keys.astype(jnp.int32).reshape(N // chunk, chunk // block, block)
+    tk = tbl_keys.astype(jnp.int32).reshape(N // chunk, chunk // block, H)
+    tn = tbl_ncand.astype(jnp.int32).reshape(N // chunk, chunk // block, H)
+
+    def chunk_fn(cand_c, kb_c, tk_c, tn_c):
+        def step(loads, inp):
+            cb, kbb, tkb, tnb = inp  # (block,d_max) (block,) (H,) (H,)
+            nc = _head_table_ncand(kbb, tkb, tnb, d_base, d_max)
+            return _masked_block_step(loads, cb, nc, n_workers, d_max)
+
+        loads0 = jnp.zeros((n_workers,), jnp.float32)
+        loads, choices = lax.scan(step, loads0, (cand_c, kb_c, tk_c, tn_c))
+        return choices.reshape(-1), loads
+
+    assign, loads = jax.vmap(chunk_fn)(cand, kb, tk, tn)
     return assign.reshape(-1).astype(jnp.int32), loads
 
 

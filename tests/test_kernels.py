@@ -4,9 +4,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.streams import zipf_stream
+from repro.core.estimation import online_head_tables
+from repro.core.streams import drift_stream, zipf_stream
 from repro.kernels import ref
-from repro.kernels.adaptive_route import adaptive_route
+from repro.kernels.adaptive_route import adaptive_route, adaptive_route_online
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.moe_pkg_dispatch import moe_pkg_dispatch
 from repro.kernels.pkg_route import pkg_route
@@ -51,6 +52,45 @@ def test_adaptive_route_chunk_block_sweep(chunk, block):
     a_k, _ = adaptive_route(keys, nc, 12, d_max=4, chunk=chunk, block=block)
     a_r, _ = ref.ref_adaptive_route(keys, nc, 12, d_max=4, chunk=chunk, block=block)
     np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_r))
+
+
+@pytest.mark.parametrize("n_workers", [16, 100])
+@pytest.mark.parametrize("capacity", [32, 64])
+def test_adaptive_route_online_matches_ref(n_workers, capacity):
+    """Head-table kernel vs oracle, tables from the real online tracker."""
+    keys = jnp.asarray(zipf_stream(4096, 777, 1.8, seed=capacity))
+    tk, tn = online_head_tables(
+        keys, block=128, capacity=capacity, n_workers=n_workers, d_max=8
+    )
+    a_k, l_k = adaptive_route_online(keys, tk, tn, n_workers, d_max=8)
+    a_r, l_r = ref.ref_adaptive_route_online(keys, tk, tn, n_workers, d_max=8)
+    np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_r))
+    np.testing.assert_array_equal(np.asarray(l_k), np.asarray(l_r))
+
+
+def test_adaptive_route_online_drift_decay_matches_ref():
+    """Same contract under drift with the windowed (decayed) tracker."""
+    keys = jnp.asarray(drift_stream(8192, 2_000, 1.8, half_life=2_048, seed=3))
+    tk, tn = online_head_tables(
+        keys, block=128, capacity=64, n_workers=100, d_max=8, decay_period=2_048
+    )
+    a_k, _ = adaptive_route_online(keys, tk, tn, 100, d_max=8)
+    a_r, _ = ref.ref_adaptive_route_online(keys, tk, tn, 100, d_max=8)
+    np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_r))
+
+
+def test_adaptive_route_online_empty_table_is_pkg_route():
+    """All-miss head tables (staleness degenerate case) reduce to plain PKG:
+    a lookup miss yields d_base candidates and the seed family is prefix-
+    stable, so assignments match pkg_route bit-exactly."""
+    keys = jnp.asarray(zipf_stream(4096, 500, 1.2, seed=3))
+    nblk = 4096 // 128
+    tk = jnp.full((nblk, 32), -1, jnp.int32)
+    tn = jnp.zeros((nblk, 32), jnp.int32)
+    a_o, l_o = adaptive_route_online(keys, tk, tn, 16, d_base=2, d_max=4)
+    a_p, l_p = pkg_route(keys, 16, d=2)
+    np.testing.assert_array_equal(np.asarray(a_o), np.asarray(a_p))
+    np.testing.assert_array_equal(np.asarray(l_o), np.asarray(l_p))
 
 
 def test_adaptive_route_all_two_choices_is_pkg_route():
