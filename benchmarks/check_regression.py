@@ -5,15 +5,18 @@ into a single BENCH_ci.json artifact (keyed by each report's "bench" field),
 and fails the build when any (bench, scenario, method) imbalance worsens by
 more than --max-ratio vs the committed baseline
 (benchmarks/baselines/BENCH_baseline.json), or when any bench's own
-acceptance checks are false.  Timings (us_per_msg) are machine-dependent and
-never gated.  An absolute floor (--floor) keeps near-zero imbalances (e.g.
-W-Choices at ~1e-5) from tripping the ratio on sampling noise.
+acceptance checks are false.  Baseline entries missing from the candidate
+report also fail (a renamed bench must not silently leave the gate).
+Timings (us_per_msg) are machine-dependent and never gated.  An absolute
+floor (--floor) keeps near-zero imbalances (e.g. W-Choices at ~1e-5) from
+tripping the ratio on sampling noise.
 
 Regenerate the baseline after an intentional change:
 
     PYTHONPATH=src:. python benchmarks/bench_scale_choices.py --quick --out /tmp/s.json
     PYTHONPATH=src:. python benchmarks/bench_drift.py --quick --out /tmp/d.json
-    python benchmarks/check_regression.py --merge /tmp/s.json /tmp/d.json \
+    PYTHONPATH=src:. python benchmarks/bench_kernels.py --quick --out /tmp/k.json
+    python benchmarks/check_regression.py --merge /tmp/s.json /tmp/d.json /tmp/k.json \
         --out benchmarks/baselines/BENCH_baseline.json
 """
 from __future__ import annotations
@@ -50,6 +53,16 @@ def compare(current: dict, baseline: dict, max_ratio: float, floor: float):
         if val > limit:
             regressions.append((key, base[key], val, limit))
     return regressions
+
+
+def missing_entries(current: dict, baseline: dict) -> list[tuple[str, str, str]]:
+    """Baseline (bench, scenario, method) keys absent from the candidate.
+
+    A renamed or dropped bench must not silently leave the gate: every entry
+    the baseline covers has to show up in the merged report, or the baseline
+    has to be regenerated deliberately (see module docstring)."""
+    cur = dict(iter_imbalances(current))
+    return [key for key in dict(iter_imbalances(baseline)) if key not in cur]
 
 
 def failed_checks(merged: dict) -> list[tuple[str, str]]:
@@ -96,7 +109,15 @@ def main(argv=None) -> int:
                 f"> limit {lim:.4g} (baseline {b:.4g} x {args.max_ratio})"
             )
             rc = 1
-        if not regressions:
+        missing = missing_entries(merged, baseline)
+        for bench, scen, method in missing:
+            print(
+                f"MISSING: {bench}/{scen}/{method} is in the baseline but "
+                "absent from the merged report — a renamed/dropped bench "
+                "leaves the gate; regenerate the baseline if intentional"
+            )
+            rc = 1
+        if not regressions and not missing:
             n = len(dict(iter_imbalances(merged)))
             print(f"no regressions across {n} imbalance entries")
     return rc

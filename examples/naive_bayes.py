@@ -7,7 +7,11 @@ SG while splitting each word across at most 2 workers, and the merged model
 is *exactly* the sequential one (counters are a monoid).
 
   PYTHONPATH=src python examples/naive_bayes.py
+
+REPRO_SMOKE=1 shrinks the corpus for CI's examples-smoke job.
 """
+import os
+
 import jax.numpy as jnp
 import numpy as np
 
@@ -17,6 +21,8 @@ from repro.core.streams import zipf_probs
 
 rng = np.random.default_rng(0)
 VOCAB, CLASSES, DOCS, W = 5_000, 3, 2_000, 10
+if os.environ.get("REPRO_SMOKE") == "1":
+    VOCAB, DOCS = 1_000, 200
 
 # class-conditional Zipf vocabularies with distinct hot words
 base = zipf_probs(VOCAB, 1.05)

@@ -4,7 +4,11 @@ Routes a skewed key stream to workers with KG / SG / PKG and prints the
 imbalance each produces — the paper's core result, via the public API.
 
   PYTHONPATH=src python examples/quickstart.py
+
+REPRO_SMOKE=1 shrinks the stream for CI's examples-smoke job.
 """
+import os
+
 import jax.numpy as jnp
 import numpy as np
 
@@ -17,8 +21,10 @@ from repro.core import (
     zipf_stream,
 )
 
+SMOKE = os.environ.get("REPRO_SMOKE") == "1"
 W = 10  # workers (downstream PEIs)
-keys = zipf_stream(n_msgs=500_000, n_keys=50_000, z=1.1, seed=0)
+n_msgs, n_keys = (20_000, 2_000) if SMOKE else (500_000, 50_000)
+keys = zipf_stream(n_msgs=n_msgs, n_keys=n_keys, z=1.1, seed=0)
 print(f"stream: {len(keys):,} messages, {len(np.unique(keys)):,} distinct keys")
 
 for name, assign in [

@@ -2,7 +2,11 @@
 request routing across replicas under hot-session skew.
 
   PYTHONPATH=src python examples/serve_demo.py
+
+REPRO_SMOKE=1 shrinks generation length and stream for CI's examples-smoke.
 """
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -12,21 +16,22 @@ from repro.core.streams import zipf_stream
 from repro.models import init_params
 from repro.serving import KGScheduler, PoTCScheduler, RoundRobinScheduler, ServeEngine
 
+SMOKE = os.environ.get("REPRO_SMOKE") == "1"
 cfg = make_tiny(get_config("qwen2.5-3b"))
 params = init_params(cfg, jax.random.PRNGKey(0))
-engine = ServeEngine(cfg, params, max_len=48)
+engine = ServeEngine(cfg, params, max_len=24 if SMOKE else 48)
 
 prompts = jnp.asarray(
     np.random.default_rng(0).integers(1, cfg.vocab_size, (4, 12)), jnp.int32
 )
-out = engine.generate(prompts, n_new=16)
+out = engine.generate(prompts, n_new=4 if SMOKE else 16)
 print("generated:", out.shape)
 for row in np.asarray(out):
     print("  ", row.tolist())
 
 # --- replica routing under skewed session keys -----------------------------
 print("\nrequest routing, 4 replicas, Zipf(1.2) session keys:")
-keys = zipf_stream(5000, 250, 1.2, seed=1)
+keys = zipf_stream(1000 if SMOKE else 5000, 250, 1.2, seed=1)
 for name, sched in [
     ("PoTC (PKG)", PoTCScheduler(4)),
     ("sticky KG", KGScheduler(4)),

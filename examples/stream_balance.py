@@ -3,7 +3,11 @@ datasets, and worker counts, with local vs global load estimation — a
 condensed Table 2 + Fig 4 you can eyeball.
 
   PYTHONPATH=src python examples/stream_balance.py
+
+REPRO_SMOKE=1 shrinks the dataset scale for CI's examples-smoke job.
 """
+import os
+
 import jax.numpy as jnp
 import numpy as np
 
@@ -19,9 +23,10 @@ from repro.core import (
 )
 
 W = 10
+SCALE = 0.001 if os.environ.get("REPRO_SMOKE") == "1" else 0.005
 print(f"{'dataset':8s} {'method':12s} imbalance-fraction")
 for tag in ("WP", "CT", "LN1", "LN2"):
-    keys = PAPER_DATASETS[tag].generate(seed=0, scale=0.005)
+    keys = PAPER_DATASETS[tag].generate(seed=0, scale=SCALE)
     n_keys = int(keys.max()) + 1
     ks = jnp.asarray(keys)
     rows = {

@@ -12,11 +12,13 @@ from repro.core.partitioners import (
     pkg_partition_batched,
     potc_static_partition,
     shuffle_partition,
+    w_choices_kernel_partition,
     w_choices_partition,
 )
 from repro.core.estimation import (
     OnlineSS,
     SpaceSavingTracker,
+    W_SENTINEL,
     adaptive_d,
     adaptive_d_counts,
     head_test,

@@ -43,6 +43,7 @@ __all__ = [
     "simulate_sources",
     "source_assignment",
     "local_imbalance_bound",
+    "W_SENTINEL",
     "SpaceSavingTracker",
     "head_test",
     "head_threshold",
@@ -56,6 +57,14 @@ __all__ = [
     "online_ss_from_tracker",
     "online_head_tables",
 ]
+
+
+# Candidate-count value flagging "this key may go to ANY worker" (W-Choices,
+# arXiv 1510.05714) to the Pallas router and its oracle.  int32 max can never
+# collide with a real d(k) — those are clipped to d_max <= n_workers — and a
+# consumer that treats it as a plain count would mask nothing (every lane
+# < W_SENTINEL participates), degrading to d_max choices instead of crashing.
+W_SENTINEL = np.int32(np.iinfo(np.int32).max)
 
 
 def source_assignment(
@@ -448,7 +457,7 @@ def online_ss_from_tracker(tracker: SpaceSavingTracker, capacity: int) -> Online
     jax.jit,
     static_argnames=(
         "block", "capacity", "n_workers", "d", "d_max", "theta", "slack",
-        "min_count", "decay_period",
+        "min_count", "decay_period", "any_worker",
     ),
 )
 def online_head_tables(
@@ -462,6 +471,7 @@ def online_head_tables(
     slack: float = 2.0,
     min_count: int = 8,
     decay_period: int = 0,
+    any_worker: bool = False,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Per-vector-block head tables for the Pallas adaptive router.
 
@@ -473,6 +483,10 @@ def online_head_tables(
     Returns (tbl_keys (N/block, capacity) int32, tbl_ncand same shape): slot
     ncand is the integer-exact d(k) for head slots and `d` otherwise, so a
     lookup miss and a tail hit are indistinguishable — both route as PKG.
+    With `any_worker=True` (W-Choices) head slots carry W_SENTINEL instead of
+    d(k), flagging "route to the global least-loaded worker" to the kernel's
+    global-argmin path — consume such tables with the router's w_mode=True
+    (DESIGN.md SS3.3).
     """
     theta_f = head_threshold(n_workers, d) if theta is None else float(theta)
     N = keys.shape[0]
@@ -482,10 +496,14 @@ def online_head_tables(
 
     def emit(state: OnlineSS):
         is_head = head_test(state.counts, state.total, theta_f, min_count)
-        dk = adaptive_d_counts(
-            state.counts, state.total, n_workers, d_base=d, d_max=d_max, slack=slack
-        )
-        return state.keys, jnp.where(is_head, dk, d).astype(jnp.int32)
+        if any_worker:
+            head_nc = jnp.full_like(state.counts, jnp.int32(W_SENTINEL))
+        else:
+            head_nc = adaptive_d_counts(
+                state.counts, state.total, n_workers,
+                d_base=d, d_max=d_max, slack=slack,
+            )
+        return state.keys, jnp.where(is_head, head_nc, d).astype(jnp.int32)
 
     def step(state, inp):
         blk, b = inp

@@ -10,4 +10,5 @@ from repro.kernels.ops import (
     moe_pkg_dispatch,
     pkg_route,
     rmsnorm,
+    w_route,
 )

@@ -9,10 +9,23 @@ into the one-hot matmul — the TPU-native formulation of DESIGN.md SS2/SS7 is
 preserved — and candidates j >= n_cand[i] are masked to +BIG before the
 lane-wise argmin, so tail keys (n_cand == 2) reproduce plain PKG bit-exactly.
 
+W-CHOICES ("head goes anywhere", arXiv 1510.05714) is in-kernel too: with
+the static opt-in w_mode=True (set by the W-named wrappers below), a key
+whose n_cand equals estimation.W_SENTINEL skips the hashed-candidate argmin
+and routes by a *global* masked argmin over the full (1, n_workers) loads row
+(pad lanes hold the 1e30 sentinel, ties break to the lowest worker index), so
+n_workers need not be a power of two nor fit one VPU lane group.  The r-th
+head lane of a block takes the r-th argmin of the sequential water-fill of
+that row — computed loop-free by one stable sort (_waterfill_picks) — so head
+messages reproduce w_choices_partition's global step exactly from block-start
+loads instead of piling a whole block onto a single stale minimum.
+
   hash   : SplitMix32 over (key ^ seed_j), j < d_max      (VPU int ops)
   lookup : one-hot(cand) @ loads                          (MXU matmul)
   mask   : lane j participates iff j < n_cand             (VPU select)
-  choose : lane-wise argmin over d_max masked candidates
+  choose : lane-wise argmin over d_max masked candidates,
+           or water-fill global argmin over all n_workers
+           lanes when n_cand == W_SENTINEL                (lane reduction)
   update : loads += ones @ one-hot(choice)                (MXU matmul)
 """
 from __future__ import annotations
@@ -24,19 +37,64 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
+from repro.core.estimation import W_SENTINEL
 from repro.core.hashing import derive_seeds, splitmix32
 
 # Mask sentinel: 1e30 is > any reachable load and fp32-exact; ref.py uses the
 # same literal so kernel and oracle stay bit-identical.
 
+_LANES = 128  # VPU lane width the global reduction pads to
 
-def _route_block(kb, nc, seeds, loads, *, n_workers, d_max, block):
+
+def _waterfill_picks(loads, *, n_workers, block):
+    """First `block` picks of sequential global-argmin routing from the
+    (1, n_workers) loads row: pick r is where the r-th head message of a
+    block goes, with every earlier pick's unit load accounted.
+
+    Pick 0 is the masked global argmin — worker lanes padded to a _LANES
+    multiple with the 1e30 mask sentinel (pad lanes can never win the min),
+    ties broken to the lowest worker index, exactly w_choices_partition's
+    `jnp.argmin(loads)` step.  The full sequence needs no sequential loop:
+    worker j's t-th pick happens at running load L_j + t, and "repeatedly
+    take the min, add one" selects the multiset {(L_j + t, j) : t >= 0} in
+    ascending (value, j) order — the block smallest entries of the
+    (W_pad, block) value matrix flattened j-major, via lax.top_k on the
+    negated values (top_k surfaces the lowest flat index first on ties, so
+    ties land on the lowest worker, then ascending t, matching argmin's
+    first-index rule at every step).  Loads are integer counts in f32, so
+    values and ties are IEEE-exact; the ref.py oracle imports this function
+    so kernel and oracle cannot drift.
+
+    Returns picks (block,) int32 worker ids.
+    """
+    pad = -n_workers % _LANES
+    row = loads
+    if pad:
+        row = jnp.concatenate(
+            [row, jnp.full((1, pad), 1e30, jnp.float32)], axis=1
+        )
+    t = jnp.arange(block, dtype=jnp.float32)
+    vals = row.reshape(n_workers + pad, 1) + t[None, :]  # (W_pad, B): (j, t)
+    _, idx = lax.top_k(-vals.reshape(-1), block)  # ties -> j-major
+    return (idx // block).astype(jnp.int32)
+
+
+def _route_block(kb, nc, seeds, loads, *, n_workers, d_max, block, w_mode):
     """The shared masked-greedy routing core for one vector block.
 
     kb (V,) int32 keys, nc (V,) int32 candidate counts, loads (1, n) f32.
     Returns (choice (V,) int32, new loads).  Both kernels call this — the
     per-key-ncand and the head-table variants differ ONLY in how nc is
     produced — so sentinel/tie-break/update semantics cannot drift apart.
+
+    With w_mode (static), lanes with nc == W_SENTINEL take the W-Choices
+    path: the r-th such lane of the block gets the r-th water-fill argmin of
+    the block-start loads row (_waterfill_picks), so consecutive head
+    messages spread exactly as the sequential global-argmin would.  Tail
+    lanes still read block-start loads only — the same < block staleness
+    contract as the load vector itself (DESIGN.md SS2).  w_mode=False skips
+    the reduction entirely for callers that never emit the sentinel
+    (D-Choices tables); sentinel-free streams route identically either way.
     """
     wid = jnp.arange(n_workers, dtype=jnp.int32)
     col = jnp.arange(d_max, dtype=jnp.int32)
@@ -49,15 +107,32 @@ def _route_block(kb, nc, seeds, loads, *, n_workers, d_max, block):
         (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     ).reshape(block, d_max)
-    lc = jnp.where(col[None, :] < nc[:, None], lc, 1e30)
+    is_w = nc == jnp.int32(W_SENTINEL)  # (V,) head-goes-anywhere flag
+    nc_tail = jnp.where(is_w, d_max, nc) if w_mode else nc
+    lc = jnp.where(col[None, :] < nc_tail[:, None], lc, 1e30)
     sel = jnp.argmin(lc, axis=-1)  # (V,)
     choice = jnp.take_along_axis(cand, sel[:, None], axis=-1)[:, 0]
+    if w_mode:
+        # W path: head rank within the block -> water-fill pick, fetched with
+        # a one-hot matmul (gather-free, DESIGN.md SS7; picks < n_workers are
+        # f32-exact).  rank < block always: at most block head lanes precede.
+        rank = jnp.cumsum(is_w.astype(jnp.int32)) - is_w  # (V,)
+        picks = _waterfill_picks(loads, n_workers=n_workers, block=block)
+        blk = jnp.arange(block, dtype=jnp.int32)
+        onehot_r = (rank[:, None] == blk[None, :]).astype(jnp.float32)  # (V, B)
+        head_choice = jax.lax.dot_general(
+            onehot_r,
+            picks.astype(jnp.float32).reshape(block, 1),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).reshape(block).astype(jnp.int32)
+        choice = jnp.where(is_w, head_choice, choice)
     hist = (choice[:, None] == wid).astype(jnp.float32).sum(axis=0)
     return choice, loads + hist[None, :]
 
 
 def _kernel(keys_ref, ncand_ref, seeds_ref, assign_ref, loads_ref, *,
-            n_workers, d_max, block):
+            n_workers, d_max, block, w_mode):
     chunk = keys_ref.shape[0]
     nblk = chunk // block
     seeds = seeds_ref[...]  # (d_max,) uint32
@@ -66,7 +141,8 @@ def _kernel(keys_ref, ncand_ref, seeds_ref, assign_ref, loads_ref, *,
         kb = keys_ref[pl.ds(i * block, block)]  # (V,)
         nc = ncand_ref[pl.ds(i * block, block)]  # (V,)
         choice, loads = _route_block(
-            kb, nc, seeds, loads, n_workers=n_workers, d_max=d_max, block=block
+            kb, nc, seeds, loads, n_workers=n_workers, d_max=d_max,
+            block=block, w_mode=w_mode,
         )
         assign_ref[pl.ds(i * block, block)] = choice
         return loads
@@ -77,7 +153,9 @@ def _kernel(keys_ref, ncand_ref, seeds_ref, assign_ref, loads_ref, *,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_workers", "d_max", "seed", "chunk", "block", "interpret"),
+    static_argnames=(
+        "n_workers", "d_max", "seed", "chunk", "block", "interpret", "w_mode"
+    ),
 )
 def adaptive_route(
     keys: jnp.ndarray,
@@ -88,16 +166,25 @@ def adaptive_route(
     chunk: int = 1024,
     block: int = 128,
     interpret: bool = True,
+    w_mode: bool = False,
 ):
     """Route keys (N,) int32 with per-key candidate counts n_cand (N,).
 
-    Returns (assign (N,), per-chunk loads (N/chunk, n_workers)).
-    N must divide by chunk; chunk by block.  interpret=True on CPU.
+    n_cand values are in [1, d_max]; with w_mode=True a value of W_SENTINEL
+    routes that key to the globally least-loaded worker (W-Choices; see
+    w_route for the flag-based wrapper, which sets w_mode itself).  Returns
+    (assign (N,), per-chunk loads (N/chunk, n_workers)).  N must divide by
+    chunk; chunk by block.  interpret=True on CPU.  The default w_mode=False
+    keeps the sentinel check and the water-fill reduction out of the inner
+    loop — D-Choices callers never emit the sentinel and pay nothing;
+    sentinel-free streams route bit-identically under both settings.
     """
     N = keys.shape[0]
     assert N % chunk == 0 and chunk % block == 0, (N, chunk, block)
     grid = (N // chunk,)
-    kern = functools.partial(_kernel, n_workers=n_workers, d_max=d_max, block=block)
+    kern = functools.partial(
+        _kernel, n_workers=n_workers, d_max=d_max, block=block, w_mode=w_mode
+    )
     assign, loads = pl.pallas_call(
         kern,
         grid=grid,
@@ -134,14 +221,17 @@ def adaptive_route(
 
 def _head_table_ncand(kb, tk, tn, d_base, d_max):
     """Per-lane candidate count from a head-table snapshot: (V, H) equality
-    compare + masked max (no gather); a miss or a tail hit yields d_base."""
+    compare + masked max (no gather); a miss or a tail hit yields d_base.
+    A W_SENTINEL table entry (any_worker head tables) passes through
+    unclipped, flagging the global-argmin path to _route_block."""
     hit = kb[:, None] == tk[None, :]  # (V, H)
     nc = jnp.max(jnp.where(hit, tn, 0), axis=1)  # (V,) 0 on miss
-    return jnp.clip(jnp.where(nc > 0, nc, d_base), d_base, d_max)
+    clipped = jnp.clip(jnp.where(nc > 0, nc, d_base), d_base, d_max)
+    return jnp.where(nc == jnp.int32(W_SENTINEL), nc, clipped)
 
 
 def _kernel_online(keys_ref, tblk_ref, tbln_ref, seeds_ref, assign_ref,
-                   loads_ref, *, n_workers, d_base, d_max, block):
+                   loads_ref, *, n_workers, d_base, d_max, block, w_mode):
     chunk = keys_ref.shape[0]
     nblk = chunk // block
     seeds = seeds_ref[...]  # (d_max,) uint32
@@ -153,7 +243,8 @@ def _kernel_online(keys_ref, tblk_ref, tbln_ref, seeds_ref, assign_ref,
         tn = tbln_ref[pl.ds(i, 1), :].reshape(H)  # (H,) int32 head-table d(k)
         nc = _head_table_ncand(kb, tk, tn, d_base, d_max)
         choice, loads = _route_block(
-            kb, nc, seeds, loads, n_workers=n_workers, d_max=d_max, block=block
+            kb, nc, seeds, loads, n_workers=n_workers, d_max=d_max,
+            block=block, w_mode=w_mode,
         )
         assign_ref[pl.ds(i * block, block)] = choice
         return loads
@@ -165,7 +256,8 @@ def _kernel_online(keys_ref, tblk_ref, tbln_ref, seeds_ref, assign_ref,
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "n_workers", "d_base", "d_max", "seed", "chunk", "block", "interpret"
+        "n_workers", "d_base", "d_max", "seed", "chunk", "block", "interpret",
+        "w_mode",
     ),
 )
 def adaptive_route_online(
@@ -179,12 +271,18 @@ def adaptive_route_online(
     chunk: int = 1024,
     block: int = 128,
     interpret: bool = True,
+    w_mode: bool = False,
 ):
     """Route keys (N,) against per-block head tables (N/block, H).
 
     tbl_keys/tbl_ncand come from core.estimation.online_head_tables(block=...)
     with the same `block`; H is the tracker capacity.  Keys absent from their
     block's table (or present with ncand == d_base) route exactly as PKG.
+    Tables emitted with any_worker=True carry W_SENTINEL for head slots, which
+    routes those keys through the in-kernel global argmin (online W-Choices) —
+    pass w_mode=True (static) with such tables; the default w_mode=False keeps
+    the water-fill reduction out of the loop for sentinel-free D-Choices
+    tables (a sentinel met without w_mode degrades to d_max candidates).
     Returns (assign (N,), per-chunk loads (N/chunk, n_workers)).
     """
     N = keys.shape[0]
@@ -194,7 +292,7 @@ def adaptive_route_online(
     grid = (N // chunk,)
     kern = functools.partial(
         _kernel_online, n_workers=n_workers, d_base=d_base, d_max=d_max,
-        block=block,
+        block=block, w_mode=w_mode,
     )
     blocks_per_chunk = chunk // block
     assign, loads = pl.pallas_call(
@@ -222,3 +320,35 @@ def adaptive_route_online(
         derive_seeds(seed, d_max),
     )
     return assign, loads
+
+
+# ---------------------------------------------------------------------------
+# W-Choices entry point: per-key head flags instead of candidate counts.
+# ---------------------------------------------------------------------------
+
+
+def w_route(
+    keys: jnp.ndarray,
+    is_head: jnp.ndarray,
+    n_workers: int,
+    d: int = 2,
+    seed: int = 0,
+    chunk: int = 1024,
+    block: int = 128,
+    interpret: bool = True,
+):
+    """W-Choices Pallas router: head keys (is_head != 0) go to the globally
+    least-loaded worker via the in-kernel global argmin; tail keys take PKG's
+    exact d-candidate step.  is_head (N,) is any int/bool array (e.g. from
+    SpaceSavingTracker.head_counts); with block=1 and chunk=N this reproduces
+    core.partitioners.w_choices_partition bit-exactly given the same head set
+    (the differential contract in tests/test_kernels.py).
+
+    Returns (assign (N,), per-chunk loads (N/chunk, n_workers)).
+    """
+    flags = jnp.asarray(is_head).astype(jnp.int32)
+    n_cand = jnp.where(flags != 0, jnp.int32(W_SENTINEL), jnp.int32(d))
+    return adaptive_route(
+        keys, n_cand, n_workers, d_max=d, seed=seed, chunk=chunk, block=block,
+        interpret=interpret, w_mode=True,
+    )

@@ -8,7 +8,11 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels.adaptive_route import adaptive_route, adaptive_route_online
+from repro.kernels.adaptive_route import (
+    adaptive_route,
+    adaptive_route_online,
+    w_route,
+)
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.moe_pkg_dispatch import moe_pkg_dispatch
 from repro.kernels.pkg_route import pkg_route
@@ -17,6 +21,7 @@ from repro.kernels.rmsnorm import rmsnorm
 __all__ = [
     "adaptive_route",
     "adaptive_route_online",
+    "w_route",
     "flash_attention",
     "moe_pkg_dispatch",
     "pkg_route",

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.estimation import W_SENTINEL
 from repro.core.hashing import hash_choices
 
 
@@ -40,22 +41,44 @@ def ref_pkg_route(keys, n_workers: int, d: int = 2, seed: int = 0,
     return assign.reshape(-1).astype(jnp.int32), loads
 
 
-def _masked_block_step(loads, cb, ncb, n_workers: int, d_max: int):
+def _masked_block_step(loads, cb, ncb, n_workers: int, d_max: int,
+                       w_mode: bool = False):
     """One vector block of the masked batch-greedy: the shared oracle core
-    for both adaptive routers (1e30 sentinel, first-index tie-break)."""
+    for both adaptive routers (1e30 sentinel, first-index tie-break).
+
+    With w_mode, lanes with ncb == W_SENTINEL take the W-Choices path: the
+    r-th such lane gets the r-th sequential global-argmin (water-fill) of the
+    block-start loads row.  The picks come from the kernel's own
+    adaptive_route._waterfill_picks, so oracle and kernel share one
+    implementation of the reduction's sentinel/tie-break contract;
+    w_mode=False skips it for sentinel-free candidate counts, exactly
+    mirroring the kernel's static flag."""
+    from repro.kernels.adaptive_route import _waterfill_picks
+
+    block = cb.shape[0]
     col = jnp.arange(d_max, dtype=jnp.int32)
     lc = loads[cb]  # (block, d_max)
-    lc = jnp.where(col[None, :] < ncb[:, None], lc, jnp.float32(1e30))
+    is_w = ncb == jnp.int32(W_SENTINEL)
+    nc_tail = jnp.where(is_w, d_max, ncb) if w_mode else ncb
+    lc = jnp.where(col[None, :] < nc_tail[:, None], lc, jnp.float32(1e30))
     sel = jnp.argmin(lc, axis=-1)
     choice = jnp.take_along_axis(cb, sel[:, None], axis=-1)[:, 0]
+    if w_mode:
+        rank = jnp.cumsum(is_w.astype(jnp.int32)) - is_w
+        picks = _waterfill_picks(
+            loads[None, :], n_workers=n_workers, block=block
+        )
+        choice = jnp.where(is_w, picks[rank], choice)
     hist = jax.nn.one_hot(choice, n_workers, dtype=jnp.float32).sum(0)
     return loads + hist, choice
 
 
 def ref_adaptive_route(keys, n_cand, n_workers: int, d_max: int = 4,
-                       seed: int = 0, chunk: int = 1024, block: int = 128):
+                       seed: int = 0, chunk: int = 1024, block: int = 128,
+                       w_mode: bool = False):
     """Chunked batch-greedy with per-key candidate counts
-    (matches kernels/adaptive_route.py, including the 1e30 mask sentinel).
+    (matches kernels/adaptive_route.py, including the 1e30 mask sentinel and,
+    with w_mode=True, the W_SENTINEL water-fill path).
 
     Returns (assign (N,), loads (N//chunk, n_workers))."""
     N = keys.shape[0]
@@ -67,7 +90,7 @@ def ref_adaptive_route(keys, n_cand, n_workers: int, d_max: int = 4,
     def chunk_fn(cand_c, nc_c):
         def step(loads, inp):  # cb (block, d_max), ncb (block,)
             cb, ncb = inp
-            return _masked_block_step(loads, cb, ncb, n_workers, d_max)
+            return _masked_block_step(loads, cb, ncb, n_workers, d_max, w_mode)
 
         loads0 = jnp.zeros((n_workers,), jnp.float32)
         loads, choices = lax.scan(step, loads0, (cand_c, nc_c))
@@ -79,7 +102,8 @@ def ref_adaptive_route(keys, n_cand, n_workers: int, d_max: int = 4,
 
 def ref_adaptive_route_online(keys, tbl_keys, tbl_ncand, n_workers: int,
                               d_base: int = 2, d_max: int = 8, seed: int = 0,
-                              chunk: int = 1024, block: int = 128):
+                              chunk: int = 1024, block: int = 128,
+                              w_mode: bool = False):
     """Chunked batch-greedy against per-block head tables
     (matches kernels/adaptive_route.py::adaptive_route_online; the table
     lookup is literally the kernel's _head_table_ncand and the greedy core
@@ -101,7 +125,7 @@ def ref_adaptive_route_online(keys, tbl_keys, tbl_ncand, n_workers: int,
         def step(loads, inp):
             cb, kbb, tkb, tnb = inp  # (block,d_max) (block,) (H,) (H,)
             nc = _head_table_ncand(kbb, tkb, tnb, d_base, d_max)
-            return _masked_block_step(loads, cb, nc, n_workers, d_max)
+            return _masked_block_step(loads, cb, nc, n_workers, d_max, w_mode)
 
         loads0 = jnp.zeros((n_workers,), jnp.float32)
         loads, choices = lax.scan(step, loads0, (cand_c, kb_c, tk_c, tn_c))
@@ -109,6 +133,35 @@ def ref_adaptive_route_online(keys, tbl_keys, tbl_ncand, n_workers: int,
 
     assign, loads = jax.vmap(chunk_fn)(cand, kb, tk, tn)
     return assign.reshape(-1).astype(jnp.int32), loads
+
+
+def ref_w_route(keys, is_head, n_workers: int, d: int = 2, seed: int = 0,
+                chunk: int = 1024, block: int = 128):
+    """Oracle for kernels/adaptive_route.py::w_route: head-flagged keys take
+    the global argmin (W-Choices), tail keys PKG's d-candidate step.
+
+    Returns (assign (N,), loads (N//chunk, n_workers))."""
+    flags = jnp.asarray(is_head).astype(jnp.int32)
+    n_cand = jnp.where(flags != 0, jnp.int32(W_SENTINEL), jnp.int32(d))
+    return ref_adaptive_route(
+        keys, n_cand, n_workers, d_max=d, seed=seed, chunk=chunk, block=block,
+        w_mode=True,
+    )
+
+
+def ref_w_route_online(keys, tbl_keys, tbl_ncand, n_workers: int,
+                       d_base: int = 2, d_max: int = 8, seed: int = 0,
+                       chunk: int = 1024, block: int = 128):
+    """Oracle for the online W-Choices path: per-block head tables emitted by
+    estimation.online_head_tables(any_worker=True), whose W_SENTINEL entries
+    route through the global argmin.  Identical code to
+    ref_adaptive_route_online with w_mode=True — the sentinel handling lives
+    in the shared _masked_block_step/_head_table_ncand pair — named
+    separately so callers state which contract they exercise."""
+    return ref_adaptive_route_online(
+        keys, tbl_keys, tbl_ncand, n_workers, d_base=d_base, d_max=d_max,
+        seed=seed, chunk=chunk, block=block, w_mode=True,
+    )
 
 
 def ref_moe_pkg_dispatch(cand, cgate, n_experts: int, block: int = 256):

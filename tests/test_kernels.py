@@ -4,10 +4,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.estimation import online_head_tables
+from repro.core.estimation import W_SENTINEL, online_head_tables
 from repro.core.streams import drift_stream, zipf_stream
 from repro.kernels import ref
-from repro.kernels.adaptive_route import adaptive_route, adaptive_route_online
+from repro.kernels.adaptive_route import (
+    _waterfill_picks,
+    adaptive_route,
+    adaptive_route_online,
+    w_route,
+)
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.moe_pkg_dispatch import moe_pkg_dispatch
 from repro.kernels.pkg_route import pkg_route
@@ -101,6 +106,155 @@ def test_adaptive_route_all_two_choices_is_pkg_route():
     a_p, l_p = pkg_route(keys, 16, d=2)
     np.testing.assert_array_equal(np.asarray(a_a), np.asarray(a_p))
     np.testing.assert_array_equal(np.asarray(l_a), np.asarray(l_p))
+
+
+# ---------------------------------------------------------------------------
+# W-Choices global-argmin path (DESIGN.md SS3.3 "In-kernel W-Choices")
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_workers", [7, 100, 150, 200])
+def test_waterfill_picks_equal_sequential_argmin(n_workers):
+    """The loop-free water-fill must reproduce 'argmin, add one' exactly —
+    including lowest-index ties — for W not a power of two and W > the VPU
+    lane width the reduction pads to."""
+    rng = np.random.default_rng(n_workers)
+    loads = rng.integers(0, 40, n_workers).astype(np.float32)
+    picks = np.asarray(
+        _waterfill_picks(jnp.asarray(loads)[None, :], n_workers=n_workers, block=96)
+    )
+    sim, cur = [], loads.copy()
+    for _ in range(96):
+        j = int(np.argmin(cur))
+        sim.append(j)
+        cur[j] += 1.0
+    assert picks.tolist() == sim
+
+
+@pytest.mark.parametrize("n_workers", [7, 50, 100, 200])
+@pytest.mark.parametrize("d", [2, 4])
+def test_w_route_matches_ref(n_workers, d):
+    """Kernel vs oracle with random head flags: assignments AND loads bit-
+    equal, across W not a power of two and W above the 128-lane block."""
+    keys = jnp.asarray(zipf_stream(2048, 500, 1.6, seed=n_workers))
+    flags = jnp.asarray(
+        (np.random.default_rng(d).random(2048) < 0.25).astype(np.int32)
+    )
+    a_k, l_k = w_route(keys, flags, n_workers, d=d, chunk=1024, block=128)
+    a_r, l_r = ref.ref_w_route(keys, flags, n_workers, d=d, chunk=1024, block=128)
+    np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_r))
+    np.testing.assert_array_equal(np.asarray(l_k), np.asarray(l_r))
+
+
+def test_w_route_all_tail_is_pkg_route():
+    """No head flags -> the sentinel path is never taken and the W router
+    IS the plain PKG router, message for message."""
+    keys = jnp.asarray(zipf_stream(2048, 500, 1.2, seed=3))
+    flags = jnp.zeros(2048, jnp.int32)
+    a_w, l_w = w_route(keys, flags, 16, d=2)
+    a_p, l_p = pkg_route(keys, 16, d=2)
+    np.testing.assert_array_equal(np.asarray(a_w), np.asarray(a_p))
+    np.testing.assert_array_equal(np.asarray(l_w), np.asarray(l_p))
+
+
+@pytest.mark.parametrize("n_workers", [13, 100])
+def test_w_route_all_head_waterfills_perfectly(n_workers):
+    """Every message head-flagged -> the whole chunk is one global water-fill:
+    worker loads differ by at most 1, and the kernel still matches its
+    oracle bit-exactly."""
+    keys = jnp.asarray(zipf_stream(1024, 50, 1.5, seed=9))
+    flags = jnp.ones(1024, jnp.int32)
+    a_k, _ = w_route(keys, flags, n_workers, chunk=1024, block=128)
+    a_r, _ = ref.ref_w_route(keys, flags, n_workers, chunk=1024, block=128)
+    np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_r))
+    loads = np.bincount(np.asarray(a_k), minlength=n_workers)
+    assert loads.max() - loads.min() <= 1
+
+
+def test_w_route_tie_break_deterministic_at_equal_loads():
+    """From an all-zero loads row, the water-fill must cycle workers in
+    ascending index order (argmin's first-index rule at every level) — the
+    tie-break contract shared with w_choices_partition."""
+    W = 16
+    keys = jnp.asarray(zipf_stream(1024, 50, 1.5, seed=1))
+    flags = jnp.ones(1024, jnp.int32)
+    a, _ = w_route(keys, flags, W, chunk=1024, block=128)
+    np.testing.assert_array_equal(
+        np.asarray(a)[:128], np.arange(128, dtype=np.int32) % W
+    )
+
+
+def test_w_route_block1_equals_w_choices_partition():
+    """THE differential contract: with block=1 (no staleness) and a single
+    chunk, the in-kernel W-Choices path reproduces the sequential
+    w_choices_partition bit-exactly given the same head set."""
+    from repro.core.estimation import SpaceSavingTracker, head_threshold
+    from repro.core.partitioners import _head_lookup, w_choices_partition
+
+    W, cap = 100, 256
+    keys_np = zipf_stream(2048, 500, 1.8, seed=5).astype(np.int32)
+    tracker = SpaceSavingTracker(cap)
+    tracker.update(keys_np)
+    head_ids, _, _ = tracker.head_counts(head_threshold(W, 2), 8)
+    assert len(head_ids) > 0, "stream must actually have head keys"
+    flags = _head_lookup(
+        keys_np.astype(np.int64), head_ids, np.ones(len(head_ids), np.int32), 0
+    )
+    a_seq = np.asarray(w_choices_partition(keys_np, W, capacity=cap))
+    a_krn, _ = w_route(
+        jnp.asarray(keys_np), jnp.asarray(flags), W, chunk=2048, block=1
+    )
+    np.testing.assert_array_equal(a_seq, np.asarray(a_krn))
+
+
+def test_w_choices_kernel_partition_registered_and_bit_exact_at_block1():
+    """The registered partitioner wraps the same contract end to end (its own
+    tracker pre-pass included) and is reachable through PARTITIONERS."""
+    from repro.core.partitioners import PARTITIONERS, w_choices_partition
+
+    assert PARTITIONERS["w_choices_kernel"] is not None
+    W, cap = 100, 256
+    keys_np = zipf_stream(1500, 400, 1.8, seed=7).astype(np.int32)  # ragged m
+    a_seq = np.asarray(w_choices_partition(keys_np, W, capacity=cap))
+    a_krn = np.asarray(
+        PARTITIONERS["w_choices_kernel"](
+            keys_np, W, capacity=cap, chunk=1536, block=1
+        )
+    )
+    np.testing.assert_array_equal(a_seq, a_krn)
+
+
+@pytest.mark.parametrize("n_workers", [50, 100])
+def test_adaptive_route_online_any_worker_matches_ref(n_workers):
+    """Online W-Choices: sentinel head tables flow through _head_table_ncand
+    unclipped and the kernel matches ref_w_route_online bit-exactly."""
+    keys = jnp.asarray(drift_stream(4096, 800, 1.8, half_life=2048, seed=2))
+    tk, tn = online_head_tables(
+        keys, block=128, capacity=64, n_workers=n_workers, d=2, d_max=2,
+        any_worker=True,
+    )
+    assert (np.asarray(tn) == int(W_SENTINEL)).any(), "no head slot emitted"
+    a_k, l_k = adaptive_route_online(
+        keys, tk, tn, n_workers, d_base=2, d_max=2, w_mode=True
+    )
+    a_r, l_r = ref.ref_w_route_online(keys, tk, tn, n_workers, d_base=2, d_max=2)
+    np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_r))
+    np.testing.assert_array_equal(np.asarray(l_k), np.asarray(l_r))
+
+
+def test_w_mode_off_matches_on_without_sentinels():
+    """w_mode is a perf switch, not a semantics switch: sentinel-free
+    candidate counts route bit-identically with the W path compiled out,
+    kernel and oracle both."""
+    keys = jnp.asarray(zipf_stream(2048, 500, 1.4, seed=4))
+    nc = jnp.asarray(np.random.default_rng(0).integers(1, 5, 2048, dtype=np.int32))
+    a_on, l_on = adaptive_route(keys, nc, 32, d_max=4, w_mode=True)
+    a_off, l_off = adaptive_route(keys, nc, 32, d_max=4, w_mode=False)
+    np.testing.assert_array_equal(np.asarray(a_on), np.asarray(a_off))
+    np.testing.assert_array_equal(np.asarray(l_on), np.asarray(l_off))
+    r_on, _ = ref.ref_adaptive_route(keys, nc, 32, d_max=4, w_mode=True)
+    r_off, _ = ref.ref_adaptive_route(keys, nc, 32, d_max=4, w_mode=False)
+    np.testing.assert_array_equal(np.asarray(r_on), np.asarray(r_off))
 
 
 @pytest.mark.parametrize("T,k,E,block", [(512, 1, 8, 128), (1024, 2, 16, 256), (2048, 8, 64, 512)])

@@ -30,6 +30,7 @@ from repro.core import (
     pkg_partition,
     pkg_partition_batched,
     shuffle_partition,
+    w_choices_kernel_partition,
     w_choices_partition,
     zipf_stream,
 )
@@ -85,6 +86,23 @@ def test_adaptive_equals_pkg_without_head_keys():
     a_pkg = np.asarray(pkg_partition(jnp.asarray(keys), 10))
     np.testing.assert_array_equal(a_pkg, np.asarray(d_choices_partition(keys, 10)))
     np.testing.assert_array_equal(a_pkg, np.asarray(w_choices_partition(keys, 10)))
+
+
+@pytest.mark.parametrize("name", ["W100_z1.6", "W100_z2.0"])
+def test_w_choices_kernel_near_perfect_on_scale_scenarios(name):
+    """(d) for the device path: the in-kernel W router (default block=128,
+    global-argmin water-fill) keeps the near-perfect balance of the
+    sequential W-Choices where PKG explodes — the gap ROADMAP open item 1
+    existed for."""
+    sc = SCALE_SCENARIOS[name]
+    keys = sc.generate(seed=11, scale=0.25)
+    W = sc.n_workers
+    pkg = final_imbalance_fraction(np.asarray(pkg_partition(jnp.asarray(keys), W)), W)
+    wk = final_imbalance_fraction(
+        np.asarray(w_choices_kernel_partition(keys, W)), W
+    )
+    assert wk < pkg / 10, (name, wk, pkg)
+    assert wk < 5e-3, (name, wk)
 
 
 def test_d_choices_candidates_extend_pkg_candidates():
