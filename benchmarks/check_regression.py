@@ -16,7 +16,8 @@ Regenerate the baseline after an intentional change:
     PYTHONPATH=src:. python benchmarks/bench_scale_choices.py --quick --out /tmp/s.json
     PYTHONPATH=src:. python benchmarks/bench_drift.py --quick --out /tmp/d.json
     PYTHONPATH=src:. python benchmarks/bench_kernels.py --quick --out /tmp/k.json
-    python benchmarks/check_regression.py --merge /tmp/s.json /tmp/d.json /tmp/k.json \
+    PYTHONPATH=src:. python benchmarks/bench_serving.py --quick --out /tmp/v.json
+    python benchmarks/check_regression.py --merge /tmp/s.json /tmp/d.json /tmp/k.json /tmp/v.json \
         --out benchmarks/baselines/BENCH_baseline.json
 """
 from __future__ import annotations

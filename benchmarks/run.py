@@ -23,6 +23,7 @@ from benchmarks import (
     bench_kernels,
     bench_moe_balance,
     bench_scale_choices,
+    bench_serving,
     bench_storm_sim,
     bench_table2,
     bench_theory,
@@ -44,6 +45,7 @@ MODULES = [
     ("kernels", bench_kernels),
     ("scale_choices", bench_scale_choices),
     ("drift", bench_drift),
+    ("serving", bench_serving),
 ]
 
 

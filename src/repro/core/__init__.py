@@ -1,7 +1,26 @@
 """Core PKG library: the paper's contribution as composable JAX modules."""
-from repro.core.hashing import hash_choices, splitmix32, derive_seeds
+from repro.core.hashing import (
+    derive_seeds,
+    derive_seeds_np,
+    hash_choices,
+    hash_choices_np,
+    splitmix32,
+    splitmix32_np,
+)
+from repro.core.routing import (
+    ROUTING_POLICIES,
+    KGPolicy,
+    LoadLedger,
+    PoTCPolicy,
+    RoundRobinPolicy,
+    RoutingPolicy,
+    WChoicesPolicy,
+    host_policy_names,
+    make_policy,
+)
 from repro.core.partitioners import (
     PARTITIONERS,
+    d_choices_kernel_partition,
     d_choices_partition,
     hash_partition,
     off_greedy_partition,
@@ -41,6 +60,7 @@ from repro.core.metrics import (
     imbalance_series,
     keys_per_worker,
     loads_from_assignment,
+    tenant_imbalance_report,
 )
 from repro.core.streams import (
     DRIFT_SCENARIOS,

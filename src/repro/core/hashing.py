@@ -11,7 +11,14 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["splitmix32", "hash_choices", "derive_seeds"]
+__all__ = [
+    "splitmix32",
+    "splitmix32_np",
+    "hash_choices",
+    "hash_choices_np",
+    "derive_seeds",
+    "derive_seeds_np",
+]
 
 _M1 = np.uint32(0x7FEB352D)
 _M2 = np.uint32(0x846CA68B)
@@ -29,17 +36,39 @@ def splitmix32(x: jnp.ndarray) -> jnp.ndarray:
     return x
 
 
-def derive_seeds(seed: int, d: int) -> jnp.ndarray:
-    """d decorrelated per-choice seeds from one integer seed."""
+def splitmix32_np(x: np.ndarray) -> np.ndarray:
+    """Numpy twin of splitmix32, bit-identical (same uint32 ops, IEEE-free).
+
+    The host-side routing policies (core.routing) hash per request with this,
+    so the serving edge and the device partitioners draw candidates from the
+    SAME hash family — one _h32 fork less to drift.
+    """
+    with np.errstate(over="ignore"):
+        x = np.asarray(x).astype(np.uint32)
+        x = x ^ (x >> np.uint32(16))
+        x = x * _M1
+        x = x ^ (x >> np.uint32(15))
+        x = x * _M2
+        x = x ^ (x >> np.uint32(16))
+    return x
+
+
+def derive_seeds_np(seed: int, d: int) -> np.ndarray:
+    """d decorrelated per-choice seeds from one integer seed (numpy uint32)."""
     base = np.uint32((int(seed) * 0x9E3779B9 + 0x9E3779B9) & 0xFFFFFFFF)
     with np.errstate(over="ignore"):
         seeds = (np.arange(1, d + 1, dtype=np.uint32) * _GOLDEN) ^ base
-    # one extra scramble round so consecutive seeds differ in high bits too
-    s = seeds
-    s = s ^ (s >> 16)
-    s = s * _M1
-    s = s ^ (s >> 15)
-    return jnp.asarray(s, dtype=jnp.uint32)
+        # one extra scramble round so consecutive seeds differ in high bits too
+        s = seeds
+        s = s ^ (s >> np.uint32(16))
+        s = s * _M1
+        s = s ^ (s >> np.uint32(15))
+    return s
+
+
+def derive_seeds(seed: int, d: int) -> jnp.ndarray:
+    """d decorrelated per-choice seeds from one integer seed."""
+    return jnp.asarray(derive_seeds_np(seed, d), dtype=jnp.uint32)
 
 
 def hash_choices(keys: jnp.ndarray, n_workers: int, d: int, seed: int = 0) -> jnp.ndarray:
@@ -52,3 +81,16 @@ def hash_choices(keys: jnp.ndarray, n_workers: int, d: int, seed: int = 0) -> jn
     k = keys.astype(jnp.uint32)[..., None]  # (..., 1)
     h = splitmix32(k ^ seeds)  # (..., d)
     return (h % jnp.uint32(n_workers)).astype(jnp.int32)
+
+
+def hash_choices_np(
+    keys, n_workers: int, d: int, seed: int = 0
+) -> np.ndarray:
+    """Numpy twin of hash_choices: bit-identical candidates, no device round
+    trip.  This is what the per-request serving schedulers hash with, which is
+    why a scheduler and a partitioner given the same (key, seed, d, n) see the
+    same candidate replicas."""
+    seeds = derive_seeds_np(seed, d)  # (d,)
+    k = np.asarray(keys).astype(np.uint32)[..., None]  # (..., 1)
+    h = splitmix32_np(k ^ seeds)  # (..., d)
+    return (h % np.uint32(n_workers)).astype(np.int32)

@@ -1,0 +1,411 @@
+"""Unified routing-policy substrate (DESIGN.md §8).
+
+A RoutingPolicy is the paper's algorithm written ONCE and consumed three ways:
+
+1. **Batch** — ``route_batch(keys, costs) -> assignments`` routes a whole
+   stream on the host (candidate hashing vectorized via hash_choices_np, the
+   load-dependent greedy step a tight numpy loop).  This is what simulations
+   and benchmarks call.
+2. **Per-request** — ``decide(key, loads)`` is one routing decision over a
+   LoadLedger snapshot.  serving.scheduler.PolicyScheduler wraps (policy,
+   ledger) into the classic ``route/complete`` scheduler interface; driving a
+   fresh adapter over a stream with no completions is bit-identical to
+   ``route_batch`` on the same stream (the differential contract in
+   tests/test_routing.py).
+3. **Device** — the Pallas routers (kernels.adaptive_route.w_route /
+   adaptive_route) are registered as batch-only device-backed policies, so a
+   benchmark sweep can put the TPU path on the same axis as the host
+   policies.
+
+Load accounting lives in exactly one place: LoadLedger.  Policies never
+mutate loads themselves — ``decide`` reads a loads vector; the caller
+(route_batch's internal ledger, or the serving adapter's shared one) acquires
+and releases.  Estimator state (the W-Choices SPACESAVING tracker, the
+round-robin cursor) lives on the policy and is cleared by ``reset()``;
+``route_batch`` always routes from a fresh state so repeated calls are
+deterministic.
+
+All candidates come from core.hashing's SplitMix32 family (hash_choices_np is
+bit-identical to the device hash_choices), so the serving edge, the host
+simulation and the kernels agree on the candidate replicas of every key.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core.estimation import SpaceSavingTracker, head_threshold
+from repro.core.hashing import derive_seeds_np, hash_choices_np, splitmix32_np
+
+
+def _hash_key_np(key: int, seeds: np.ndarray, n_workers: int) -> np.ndarray:
+    """Scalar fast path of hash_choices_np with precomputed per-choice seeds
+    (bit-identical; ``seeds = derive_seeds_np(seed, d)``).  decide() runs
+    once per request, so re-deriving the seed family there would dominate
+    the serving adapter's hot path."""
+    with np.errstate(over="ignore"):
+        h = splitmix32_np(np.uint32(int(key) & 0xFFFFFFFF) ^ seeds)
+        return (h % np.uint32(n_workers)).astype(np.int32)
+
+__all__ = [
+    "LoadLedger",
+    "RoutingPolicy",
+    "KGPolicy",
+    "RoundRobinPolicy",
+    "PoTCPolicy",
+    "WChoicesPolicy",
+    "DeviceWChoicesPolicy",
+    "DeviceDChoicesPolicy",
+    "ROUTING_POLICIES",
+    "DEFAULT_SCHEDULER",
+    "host_policy_names",
+    "scheduler_sweep_names",
+    "make_policy",
+]
+
+
+class LoadLedger:
+    """THE outstanding-work account: one float64 vector, acquire/release.
+
+    Every consumer of a policy talks to loads through this class, so the
+    "route adds exactly cost, complete releases it, never negative" contract
+    is written once instead of per scheduler class.
+    """
+
+    __slots__ = ("loads",)
+
+    def __init__(self, n_replicas: int):
+        self.loads = np.zeros(n_replicas, dtype=np.float64)
+
+    @property
+    def n(self) -> int:
+        return len(self.loads)
+
+    def acquire(self, replica: int, cost: float = 1.0) -> None:
+        self.loads[replica] += cost
+
+    def release(self, replica: int, cost: float = 1.0) -> None:
+        """Completion event; clamps at zero (over-release is a no-op tail)."""
+        self.loads[replica] = max(0.0, self.loads[replica] - cost)
+
+    def imbalance(self) -> float:
+        """I(t) = max - avg of the current outstanding work."""
+        return float(self.loads.max() - self.loads.mean())
+
+    def imbalance_fraction(self) -> float:
+        """I(t) normalized by total outstanding work (0 when idle)."""
+        return self.imbalance() / max(float(self.loads.sum()), 1.0)
+
+
+class RoutingPolicy:
+    """Base policy: stateful estimator + pure decision over a loads vector.
+
+    Subclasses implement ``decide`` (and usually override ``route_batch`` to
+    hoist candidate hashing out of the loop).  ``reset()`` clears estimator
+    state; ``route_batch`` calls it first, so a batch call always routes the
+    stream from scratch.
+    """
+
+    name = "base"
+    per_request = True  # False for device-backed batch-only policies
+
+    def __init__(self, n_replicas: int, d: int = 2, seed: int = 0):
+        if n_replicas < 1:
+            raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+        self.n = n_replicas
+        self.d = min(d, n_replicas)
+        self.seed = seed
+
+    def reset(self) -> None:
+        """Clear estimator state (tracker, cursors); loads live elsewhere."""
+
+    def decide(self, key: int, loads: np.ndarray) -> int:
+        raise NotImplementedError
+
+    def _batch_costs(self, m: int, costs) -> np.ndarray:
+        if costs is None:
+            return np.ones(m, dtype=np.float64)
+        costs = np.asarray(costs, dtype=np.float64)
+        if costs.shape != (m,):
+            raise ValueError(f"costs shape {costs.shape} != ({m},)")
+        return costs
+
+    def route_batch(self, keys, costs=None) -> np.ndarray:
+        """Route a stream from a fresh state; the per-request reference.
+
+        Default implementation is the literal decide/acquire loop; overrides
+        must stay bit-identical to it (that IS the adapter contract).
+        """
+        self.reset()
+        keys = np.asarray(keys).reshape(-1)
+        costs = self._batch_costs(len(keys), costs)
+        ledger = LoadLedger(self.n)
+        out = np.empty(len(keys), dtype=np.int32)
+        for i, k in enumerate(keys):
+            c = self.decide(int(k), ledger.loads)
+            ledger.acquire(c, costs[i])
+            out[i] = c
+        return out
+
+
+class KGPolicy(RoutingPolicy):
+    """Key grouping: sticky single-choice hashing (load-oblivious)."""
+
+    name = "kg"
+
+    def __init__(self, n_replicas: int, d: int = 2, seed: int = 0):
+        super().__init__(n_replicas, d=d, seed=seed)
+        self._seeds = derive_seeds_np(seed, 1)
+
+    def decide(self, key: int, loads: np.ndarray) -> int:
+        return int(_hash_key_np(key, self._seeds, self.n)[0])
+
+    def route_batch(self, keys, costs=None) -> np.ndarray:
+        self.reset()
+        keys = np.asarray(keys).reshape(-1)
+        self._batch_costs(len(keys), costs)  # validate shape only
+        return hash_choices_np(keys, self.n, d=1, seed=self.seed)[:, 0]
+
+
+class RoundRobinPolicy(RoutingPolicy):
+    """Shuffle grouping: cyclic, key- and load-oblivious.
+
+    The seed is honored as a scrambled start offset, so replicated frontends
+    with different seeds don't all hammer replica 0 in lockstep.
+    """
+
+    name = "rr"
+
+    def __init__(self, n_replicas: int, d: int = 2, seed: int = 0):
+        super().__init__(n_replicas, d=d, seed=seed)
+        self._offset = int(splitmix32_np(np.uint32(seed & 0xFFFFFFFF))) % self.n
+        self._step = 0
+
+    def reset(self) -> None:
+        self._step = 0
+
+    def decide(self, key: int, loads: np.ndarray) -> int:
+        c = (self._offset + self._step) % self.n
+        self._step += 1
+        return c
+
+    def route_batch(self, keys, costs=None) -> np.ndarray:
+        self.reset()
+        keys = np.asarray(keys).reshape(-1)
+        self._batch_costs(len(keys), costs)
+        out = ((self._offset + np.arange(len(keys), dtype=np.int64)) % self.n)
+        self._step = len(keys)
+        return out.astype(np.int32)
+
+
+class PoTCPolicy(RoutingPolicy):
+    """PKG at the edge: d hash candidates, least-loaded wins (first-index
+    ties), loads are whatever ledger the caller carries — local estimation
+    when each frontend keeps its own."""
+
+    name = "potc"
+
+    def __init__(self, n_replicas: int, d: int = 2, seed: int = 0):
+        super().__init__(n_replicas, d=d, seed=seed)
+        self._seeds = derive_seeds_np(seed, self.d)
+
+    def candidates(self, key: int) -> np.ndarray:
+        return _hash_key_np(key, self._seeds, self.n)
+
+    def decide(self, key: int, loads: np.ndarray) -> int:
+        c = self.candidates(key)
+        return int(c[np.argmin(loads[c])])
+
+    def route_batch(self, keys, costs=None) -> np.ndarray:
+        self.reset()
+        keys = np.asarray(keys).reshape(-1)
+        costs = self._batch_costs(len(keys), costs)
+        cand = hash_choices_np(keys, self.n, d=self.d, seed=self.seed)
+        loads = np.zeros(self.n, dtype=np.float64)
+        out = np.empty(len(keys), dtype=np.int32)
+        for i in range(len(keys)):
+            c = cand[i]
+            w = c[np.argmin(loads[c])]
+            loads[w] += costs[i]
+            out[i] = w
+        return out
+
+
+class WChoicesPolicy(PoTCPolicy):
+    """W-Choices at the edge (arXiv 1510.05714): hot keys go anywhere.
+
+    A SPACESAVING tracker flags keys whose estimated request fraction clears
+    ``theta`` (default d/n — the balanceability limit of paper §5); hot keys
+    route to the globally least-loaded replica, cold keys keep PoTC's exact
+    step (and therefore its <= d replica fanout / prefix-cache affinity).
+    """
+
+    name = "w_choices"
+
+    def __init__(self, n_replicas: int, d: int = 2, seed: int = 0,
+                 capacity: int = 256, theta: Optional[float] = None,
+                 min_count: int = 8):
+        super().__init__(n_replicas, d=d, seed=seed)
+        self.theta = head_threshold(n_replicas, self.d) if theta is None else theta
+        self.capacity = capacity
+        self.min_count = min_count
+        self.tracker = SpaceSavingTracker(capacity)
+
+    def reset(self) -> None:
+        self.tracker = SpaceSavingTracker(self.capacity)
+
+    def is_hot(self, key: int) -> bool:
+        return self.tracker.is_head(key, self.theta, min_count=self.min_count)
+
+    def decide(self, key: int, loads: np.ndarray) -> int:
+        self.tracker.offer(key)
+        if self.is_hot(key):
+            return int(np.argmin(loads))
+        return super().decide(key, loads)
+
+    def route_batch(self, keys, costs=None) -> np.ndarray:
+        self.reset()
+        keys = np.asarray(keys).reshape(-1)
+        costs = self._batch_costs(len(keys), costs)
+        cand = hash_choices_np(keys, self.n, d=self.d, seed=self.seed)
+        loads = np.zeros(self.n, dtype=np.float64)
+        out = np.empty(len(keys), dtype=np.int32)
+        for i in range(len(keys)):
+            k = int(keys[i])
+            self.tracker.offer(k)
+            if self.is_hot(k):
+                w = int(np.argmin(loads))
+            else:
+                c = cand[i]
+                w = c[np.argmin(loads[c])]
+            loads[w] += costs[i]
+            out[i] = w
+        return out
+
+
+class _DevicePolicy(RoutingPolicy):
+    """Batch-only policy backed by a Pallas router (unit-cost messages).
+
+    The kernels account loads in integer message counts, so non-unit costs
+    are rejected rather than silently dropped; per-request ``decide`` is not
+    available — wrap the host WChoicesPolicy for the serving adapter and use
+    these for device-batch sweeps.
+    """
+
+    per_request = False
+
+    def __init__(self, n_replicas: int, d: int = 2, seed: int = 0,
+                 capacity: int = 1024, theta: Optional[float] = None,
+                 min_count: int = 8, block: int = 128,
+                 interpret: bool = True):
+        super().__init__(n_replicas, d=d, seed=seed)
+        self.capacity = capacity
+        self.theta = theta
+        self.min_count = min_count
+        self.block = block
+        self.interpret = interpret
+
+    def decide(self, key: int, loads: np.ndarray) -> int:
+        raise NotImplementedError(
+            f"{type(self).__name__} is device-backed and batch-only; "
+            "use route_batch, or a host policy for per-request serving"
+        )
+
+    def _unit_costs(self, m: int, costs) -> None:
+        costs = self._batch_costs(m, costs)
+        if not np.all(costs == 1.0):
+            raise ValueError(
+                "device-backed policies route unit-cost messages only"
+            )
+
+
+class DeviceWChoicesPolicy(_DevicePolicy):
+    """W-Choices on the in-kernel global-argmin path (kernels w_route)."""
+
+    name = "w_choices_kernel"
+
+    def route_batch(self, keys, costs=None) -> np.ndarray:
+        from repro.core.partitioners import w_choices_kernel_partition
+
+        keys = np.asarray(keys).reshape(-1)
+        self._unit_costs(len(keys), costs)
+        return np.asarray(
+            w_choices_kernel_partition(
+                keys, self.n, d=self.d, seed=self.seed,
+                theta=self.theta, capacity=self.capacity,
+                min_count=self.min_count, block=self.block,
+                interpret=self.interpret,
+            )
+        )
+
+
+class DeviceDChoicesPolicy(_DevicePolicy):
+    """D-Choices on the Pallas masked-prefix router: a thin wrapper over
+    core.partitioners.d_choices_kernel_partition (which shares its
+    SPACESAVING pre-pass and d(k) schedule with d_choices_partition)."""
+
+    name = "d_choices_kernel"
+
+    def __init__(self, n_replicas: int, d: int = 2, seed: int = 0,
+                 d_max: int = 16, slack: float = 2.0, **kw):
+        super().__init__(n_replicas, d=d, seed=seed, **kw)
+        self.d_max = max(int(min(d_max, n_replicas)), self.d)
+        self.slack = slack
+
+    def route_batch(self, keys, costs=None) -> np.ndarray:
+        from repro.core.partitioners import d_choices_kernel_partition
+
+        keys = np.asarray(keys).reshape(-1)
+        self._unit_costs(len(keys), costs)
+        return np.asarray(
+            d_choices_kernel_partition(
+                keys, self.n, d=self.d, d_max=self.d_max, seed=self.seed,
+                theta=self.theta, capacity=self.capacity, slack=self.slack,
+                min_count=self.min_count, block=self.block,
+                interpret=self.interpret,
+            )
+        )
+
+
+ROUTING_POLICIES = {
+    p.name: p
+    for p in (
+        KGPolicy,
+        RoundRobinPolicy,
+        PoTCPolicy,
+        WChoicesPolicy,
+        DeviceWChoicesPolicy,
+        DeviceDChoicesPolicy,
+    )
+}
+
+
+DEFAULT_SCHEDULER = "w_choices"
+
+
+def host_policy_names() -> tuple:
+    """Registered per-request-capable policies, in registry order — THE list
+    the serving demos and bench sweep iterate, so a newly registered host
+    policy shows up everywhere without editing three files."""
+    return tuple(n for n, c in ROUTING_POLICIES.items() if c.per_request)
+
+
+def scheduler_sweep_names() -> tuple:
+    """host_policy_names with the preferred default (DEFAULT_SCHEDULER)
+    listed first — the display order the launcher and demo share."""
+    return (DEFAULT_SCHEDULER,) + tuple(
+        n for n in host_policy_names() if n != DEFAULT_SCHEDULER
+    )
+
+
+def make_policy(name: str, n_replicas: int, **kw) -> RoutingPolicy:
+    """Instantiate a registered policy; kw pass through to its __init__."""
+    try:
+        cls = ROUTING_POLICIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown routing policy {name!r}; "
+            f"registered: {sorted(ROUTING_POLICIES)}"
+        ) from None
+    return cls(n_replicas, **kw)

@@ -1,7 +1,20 @@
 from repro.serving.scheduler import (
     KGScheduler,
+    PolicyScheduler,
     PoTCScheduler,
     RoundRobinScheduler,
     WChoicesScheduler,
 )
+from repro.serving.sim import SimResult, simulate_serving
 from repro.serving.engine import ServeEngine
+
+__all__ = [
+    "KGScheduler",
+    "PolicyScheduler",
+    "PoTCScheduler",
+    "RoundRobinScheduler",
+    "WChoicesScheduler",
+    "SimResult",
+    "simulate_serving",
+    "ServeEngine",
+]

@@ -1,27 +1,45 @@
-"""Request -> replica schedulers (the paper's algorithm at the cluster edge).
+"""Request -> replica schedulers: thin adapters over core.routing.
 
-PoTCScheduler is PKG verbatim: each *frontend* keeps only a local estimate of
-outstanding work per replica; a request's key (e.g. prefix-cache/session id)
-hashes to d=2 candidate replicas; the less-loaded one wins.  Keys therefore
-hit at most 2 replicas (prefix caches stay warm ~2-way) while load stays
-balanced under key skew — the serving analogue of key splitting.
+The routing rules themselves live in the unified substrate
+(core/routing.py): one RoutingPolicy per technique, one LoadLedger for load
+accounting, candidates from core.hashing's SplitMix32 family (the same hash
+the partitioners and kernels use).  This module only adapts a policy to the
+classic per-request scheduler interface —
 
-Baselines: KGScheduler (sticky hashing — hot sessions overload one replica)
-and RoundRobinScheduler (balanced but 0% cache affinity).
+    r = sched.route(key, cost)     # decide + acquire
+    sched.complete(r, cost)        # release (completion event)
+    sched.loads                    # the ledger's outstanding-work vector
 
-WChoicesScheduler is the W-Choices upgrade (arXiv 1510.05714, DESIGN.md
-SS3.3): a SPACESAVING tracker flags hot session ids online, and hot requests
-may route to ANY replica (global least-loaded) while cold sessions keep the
-d=2 affinity guarantee.  This is the regime where replicas outnumber hot
-sessions and two choices per hot key are no longer enough.
+— and re-exports the four named schedulers as one-line subclasses, so
+existing callers keep their constructors while the load-accounting and
+hashing code exists exactly once.  Driving a fresh scheduler over a stream
+with no completions is bit-identical to ``policy.route_batch`` on the same
+stream (tests/test_routing.py).
+
+PoTCScheduler is PKG verbatim at the cluster edge (paper §7): a request's
+session key hashes to d=2 candidate replicas, the less-loaded wins — keys
+touch <= 2 replicas (prefix caches stay warm) while load balances under
+skew.  WChoicesScheduler (arXiv 1510.05714, DESIGN.md §3.3) upgrades it for
+the W >> head-keys regime: a SPACESAVING tracker flags hot session ids
+online and routes them to the globally least-loaded replica.  KGScheduler
+(sticky hashing) and RoundRobinScheduler are the two ends of the
+prefix-cache/balance tradeoff that serving.sim measures.
 """
 from __future__ import annotations
 
-import numpy as np
+from typing import Optional
 
-from repro.core.estimation import SpaceSavingTracker, head_threshold
+from repro.core.routing import (
+    KGPolicy,
+    LoadLedger,
+    PoTCPolicy,
+    RoundRobinPolicy,
+    RoutingPolicy,
+    WChoicesPolicy,
+)
 
 __all__ = [
+    "PolicyScheduler",
     "PoTCScheduler",
     "KGScheduler",
     "RoundRobinScheduler",
@@ -29,85 +47,84 @@ __all__ = [
 ]
 
 
-def _h32(x: int, seed: int) -> int:
-    v = (x ^ (seed * 0x9E3779B9)) & 0xFFFFFFFF
-    v = ((v ^ (v >> 16)) * 0x7FEB352D) & 0xFFFFFFFF
-    v = ((v ^ (v >> 15)) * 0x846CA68B) & 0xFFFFFFFF
-    return (v ^ (v >> 16)) & 0xFFFFFFFF
+class PolicyScheduler:
+    """THE per-request adapter: one policy + one ledger, nothing else.
+
+    The scheduler takes OWNERSHIP of the policy instance: construction
+    reset()s its estimator state (the adapter==route_batch contract starts
+    from scratch), and sharing one policy across schedulers would couple
+    their routing through the shared tracker/cursor — give each scheduler
+    its own instance (make_policy is cheap).
+    """
+
+    def __init__(self, policy: RoutingPolicy):
+        if not policy.per_request:
+            raise ValueError(
+                f"policy {policy.name!r} is batch-only (device-backed); "
+                "per-request serving needs a host policy"
+            )
+        policy.reset()  # the adapter==route_batch contract needs fresh state
+        self.policy = policy
+        self.ledger = LoadLedger(policy.n)
+
+    @property
+    def n(self) -> int:
+        return self.policy.n
+
+    @property
+    def loads(self):
+        return self.ledger.loads
+
+    def route(self, key: int, cost: float = 1.0) -> int:
+        c = self.policy.decide(int(key), self.ledger.loads)
+        self.ledger.acquire(c, cost)
+        return c
+
+    def complete(self, replica: int, cost: float = 1.0) -> None:
+        self.ledger.release(replica, cost)
 
 
-class PoTCScheduler:
+class PoTCScheduler(PolicyScheduler):
     """Power-of-two-choices with local load estimation per frontend."""
 
     def __init__(self, n_replicas: int, d: int = 2, seed: int = 0):
-        self.n = n_replicas
-        self.d = d
+        super().__init__(PoTCPolicy(n_replicas, d=d, seed=seed))
+        self.d = self.policy.d
         self.seed = seed
-        self.loads = np.zeros(n_replicas, dtype=np.float64)  # outstanding tokens
-
-    def route(self, key: int, cost: float = 1.0) -> int:
-        cands = [_h32(key, self.seed + j) % self.n for j in range(self.d)]
-        c = min(cands, key=lambda i: self.loads[i])
-        self.loads[c] += cost
-        return c
-
-    def complete(self, replica: int, cost: float = 1.0) -> None:
-        self.loads[replica] = max(0.0, self.loads[replica] - cost)
 
 
-class KGScheduler:
+class KGScheduler(PolicyScheduler):
     """Sticky key-hashing (single choice)."""
 
     def __init__(self, n_replicas: int, seed: int = 0):
-        self.n, self.seed = n_replicas, seed
-        self.loads = np.zeros(n_replicas, dtype=np.float64)
-
-    def route(self, key: int, cost: float = 1.0) -> int:
-        c = _h32(key, self.seed) % self.n
-        self.loads[c] += cost
-        return c
-
-    def complete(self, replica: int, cost: float = 1.0) -> None:
-        self.loads[replica] = max(0.0, self.loads[replica] - cost)
+        super().__init__(KGPolicy(n_replicas, seed=seed))
+        self.seed = seed
 
 
-class WChoicesScheduler(PoTCScheduler):
-    """W-Choices: hot session ids may route to any replica.
+class RoundRobinScheduler(PolicyScheduler):
+    """Cyclic routing; the seed sets a scrambled start offset."""
 
-    Cold keys behave exactly like PoTCScheduler (d candidates, least loaded
-    wins, <= d replicas per key).  A key becomes hot once its estimated
-    request fraction reaches `theta` (default d/n_replicas, the balanceability
-    limit); from then on it goes to the globally least-loaded replica.
-    """
+    def __init__(self, n_replicas: int, seed: int = 0):
+        super().__init__(RoundRobinPolicy(n_replicas, seed=seed))
+        self.seed = seed
+
+
+class WChoicesScheduler(PolicyScheduler):
+    """W-Choices: hot session ids may route to any replica; cold sessions
+    keep PoTC's d-candidate step and <= d replica fanout."""
 
     def __init__(self, n_replicas: int, d: int = 2, seed: int = 0,
-                 capacity: int = 256, theta: float | None = None,
+                 capacity: int = 256, theta: Optional[float] = None,
                  min_count: int = 8):
-        super().__init__(n_replicas, d=d, seed=seed)
-        self.theta = head_threshold(n_replicas, d) if theta is None else theta
-        self.min_count = min_count
-        self.tracker = SpaceSavingTracker(capacity)
+        super().__init__(
+            WChoicesPolicy(
+                n_replicas, d=d, seed=seed, capacity=capacity, theta=theta,
+                min_count=min_count,
+            )
+        )
+        self.d = self.policy.d
+        self.seed = seed
 
-    def route(self, key: int, cost: float = 1.0) -> int:
-        self.tracker.offer(key)
-        if self.tracker.is_head(key, self.theta, min_count=self.min_count):
-            c = int(np.argmin(self.loads))
-            self.loads[c] += cost
-            return c
-        return super().route(key, cost)
-
-
-class RoundRobinScheduler:
-    def __init__(self, n_replicas: int, seed: int = 0):
-        self.n = n_replicas
-        self._i = 0
-        self.loads = np.zeros(n_replicas, dtype=np.float64)
-
-    def route(self, key: int, cost: float = 1.0) -> int:
-        c = self._i % self.n
-        self._i += 1
-        self.loads[c] += cost
-        return c
-
-    def complete(self, replica: int, cost: float = 1.0) -> None:
-        self.loads[replica] = max(0.0, self.loads[replica] - cost)
+    @property
+    def tracker(self):
+        return self.policy.tracker

@@ -1,0 +1,134 @@
+"""Discrete-event serving simulator: completion accounting, the prefix-cache
+model, and per-tenant SLO reporting (DESIGN.md §8)."""
+import numpy as np
+import pytest
+
+from repro.core.metrics import tenant_imbalance_report
+from repro.core.routing import make_policy
+from repro.core.streams import multi_tenant_stream, zipf_stream
+from repro.serving import PolicyScheduler, simulate_serving
+
+
+def _sched(name, n, **kw):
+    return PolicyScheduler(make_policy(name, n, d=2, seed=0, **kw))
+
+
+def test_sim_delivers_every_completion_and_drains():
+    """Every routed request completes exactly once; after the drain the
+    scheduler ledger is empty — outstanding work really is outstanding."""
+    keys = zipf_stream(3_000, 200, 1.2, seed=0)
+    sched = _sched("potc", 8)
+    res = simulate_serving(sched, keys, utilization=0.8)
+    assert res.completed == len(keys)
+    assert sched.loads.sum() == 0.0
+    assert (sched.loads >= 0).all()
+    assert res.makespan > 0
+
+
+def test_sim_costs_flow_through_ledger():
+    keys = np.arange(100, dtype=np.int32)
+    costs = np.full(100, 2.5)
+    sched = _sched("rr", 4)
+    res = simulate_serving(sched, keys, costs=costs, utilization=0.5)
+    assert res.completed == 100
+    assert sched.loads.sum() == 0.0
+    assert res.makespan >= 2.5  # at least one full service time
+
+
+def test_sim_outstanding_tracks_queue_not_cumulative():
+    """At low utilization outstanding work stays tiny even though cumulative
+    routed work grows without bound — the launch/serve.py fix."""
+    keys = zipf_stream(5_000, 500, 0.8, seed=1)
+    sched = _sched("rr", 8)
+    res = simulate_serving(sched, keys, utilization=0.3)
+    # queue depth bounded => peak outstanding is orders below total work
+    # (the old serve.py printed cumulative loads, which would be ~m/n here)
+    assert res.peak_outstanding < 0.05 * len(keys)
+
+
+def test_prefix_cache_hit_rates_order_kg_over_rr():
+    """Sticky routing keeps sessions' prefixes warm; spraying does not."""
+    keys = zipf_stream(8_000, 400, 1.4, seed=2)
+    r_kg = simulate_serving(_sched("kg", 16), keys, cache_capacity=32)
+    r_rr = simulate_serving(_sched("rr", 16), keys, cache_capacity=32)
+    assert r_kg.hit_rate > r_rr.hit_rate
+    assert r_kg.session_fanout_max == 1
+    assert r_rr.session_fanout_max == 16
+
+
+def test_prefix_cache_lru_capacity_matters():
+    """Shrinking the cache lowers the hit-rate (capacity misses appear)."""
+    keys = zipf_stream(8_000, 600, 1.2, seed=3)
+    big = simulate_serving(_sched("kg", 4), keys, cache_capacity=256)
+    tiny = simulate_serving(_sched("kg", 4), keys, cache_capacity=8)
+    assert tiny.hit_rate < big.hit_rate
+
+
+def test_sim_assignments_match_policy_under_no_queueing():
+    """With utilization -> 0 every request completes before the next one
+    arrives, so loads are always zero at decision time: load-oblivious
+    policies (kg) give identical assignments to route_batch."""
+    keys = zipf_stream(1_000, 100, 1.0, seed=4)
+    res = simulate_serving(_sched("kg", 8), keys, utilization=0.01)
+    np.testing.assert_array_equal(
+        res.assign, make_policy("kg", 8, seed=0).route_batch(keys)
+    )
+
+
+def test_sim_validates_inputs():
+    with pytest.raises(ValueError, match="costs length"):
+        simulate_serving(_sched("rr", 4), np.arange(10), costs=np.ones(5))
+    with pytest.raises(ValueError, match="utilization"):
+        simulate_serving(_sched("rr", 4), np.arange(10), utilization=0.0)
+
+
+# --- per-tenant SLO accounting ----------------------------------------------
+
+
+def test_tenant_report_counts_violations():
+    """Crafted assignment: tenant 0 all on one replica (gross violation),
+    tenant 1 perfectly round-robin (no violation)."""
+    m = 4_000
+    tenants = np.arange(m) % 2
+    # tenant 1 cycles all 8 replicas ((i//2) % 8 over odd i hits every value)
+    assign = np.where(tenants == 0, 0, (np.arange(m) // 2) % 8).astype(np.int32)
+    rep = tenant_imbalance_report(assign, tenants, 8, slo=0.05)
+    assert rep["tenants"][0]["violated"]
+    assert not rep["tenants"][1]["violated"]
+    assert rep["tenants_violating"] == 1
+    assert rep["tenants"][0]["checkpoint_violations"] > 0
+    assert rep["tenants"][1]["checkpoint_violations"] == 0
+    # tenant 0: replica 0 holds everything; avg_t I(t)/m averages the growing
+    # prefix, so the fraction sits near (1 - 1/8) * mean(t)/m ~ 0.44
+    assert rep["tenants"][0]["avg_imbalance_fraction"] > 0.3
+    assert rep["tenants"][1]["avg_imbalance_fraction"] < 0.01
+
+
+def test_tenant_report_shape_mismatch_raises():
+    with pytest.raises(ValueError, match="shape mismatch"):
+        tenant_imbalance_report(np.zeros(5, int), np.zeros(4, int), 2)
+
+
+def test_sim_tenant_slo_w_choices_clean_kg_dirty():
+    """The bench_serving acceptance story at test size: under multi-tenant
+    skew at W >> hot sessions, KG violates tenant SLOs, W-Choices does not,
+    and the tradeoff ordering holds."""
+    keys, tenants = multi_tenant_stream(
+        20_000, n_tenants=4, n_keys=2_000, z=1.6, weights=[4, 2, 1, 1], seed=0
+    )
+    out = {}
+    for name in ("kg", "rr", "potc", "w_choices"):
+        out[name] = simulate_serving(
+            _sched(name, 100), keys, tenants=tenants, cache_capacity=64,
+            slo=0.1,  # above the lightest tenant's small-sample noise floor
+        )
+    assert out["kg"].tenant_report["tenants_violating"] > 0
+    assert out["w_choices"].tenant_report["tenants_violating"] == 0
+    # hit-rate: kg > {w, potc} > rr ; imbalance: w < potc < kg
+    assert out["kg"].hit_rate > out["w_choices"].hit_rate > out["rr"].hit_rate
+    assert out["kg"].hit_rate > out["potc"].hit_rate > out["rr"].hit_rate
+    assert (
+        out["w_choices"].assign_imbalance
+        < out["potc"].assign_imbalance
+        < out["kg"].assign_imbalance
+    )
