@@ -1,15 +1,23 @@
-"""Merge bench reports into one BENCH_*.json and gate on imbalance regressions.
+"""Merge bench reports into one BENCH_*.json and gate on metric regressions.
 
 CI's bench-quick job runs the JSON benches in --quick mode, merges them here
 into a single BENCH_ci.json artifact (keyed by each report's "bench" field),
-and fails the build when any (bench, scenario, method) imbalance worsens by
-more than --max-ratio vs the committed baseline
-(benchmarks/baselines/BENCH_baseline.json), or when any bench's own
-acceptance checks are false.  Baseline entries missing from the candidate
-report also fail (a renamed bench must not silently leave the gate).
-Timings (us_per_msg) are machine-dependent and never gated.  An absolute
-floor (--floor) keeps near-zero imbalances (e.g. W-Choices at ~1e-5) from
-tripping the ratio on sampling noise.
+and fails the build when, vs the committed baseline
+(benchmarks/baselines/BENCH_baseline.json):
+
+  * any (bench, scenario, method) "imbalance" or "drop_rate" entry worsens
+    (grows) by more than --max-ratio, or
+  * any "rel_throughput" entry worsens (shrinks) below baseline/--max-ratio —
+    rel_throughput is a same-run ratio (mode tokens/sec over the baseline
+    mode's), so same-machine comparisons are meaningful where absolute
+    tokens/sec would not be, or
+  * any bench's own acceptance checks are false.
+
+Baseline entries missing from the candidate report also fail (a renamed
+bench must not silently leave the gate).  Absolute timings (us_per_msg,
+tokens_per_sec) are machine-dependent and never gated.  An absolute floor
+(--floor) keeps near-zero values (e.g. W-Choices imbalance at ~1e-5, zero
+drop rates) from tripping the ratio on sampling noise.
 
 Regenerate the baseline after an intentional change:
 
@@ -17,7 +25,10 @@ Regenerate the baseline after an intentional change:
     PYTHONPATH=src:. python benchmarks/bench_drift.py --quick --out /tmp/d.json
     PYTHONPATH=src:. python benchmarks/bench_kernels.py --quick --out /tmp/k.json
     PYTHONPATH=src:. python benchmarks/bench_serving.py --quick --out /tmp/v.json
-    python benchmarks/check_regression.py --merge /tmp/s.json /tmp/d.json /tmp/k.json /tmp/v.json \
+    PYTHONPATH=src:. python benchmarks/bench_moe_balance.py --quick --out /tmp/m.json
+    PYTHONPATH=src:. python benchmarks/bench_moe_train.py --quick --out /tmp/t.json
+    python benchmarks/check_regression.py --merge /tmp/s.json /tmp/d.json /tmp/k.json \
+        /tmp/v.json /tmp/m.json /tmp/t.json \
         --out benchmarks/baselines/BENCH_baseline.json
 """
 from __future__ import annotations
@@ -36,34 +47,53 @@ def merge_reports(paths: list[str]) -> dict:
     return merged
 
 
-def iter_imbalances(merged: dict):
-    """Yield ((bench, scenario, method), value) for every imbalance entry."""
+# gated metric -> direction: "up" fails when the value grows past
+# ratio*baseline (cost metrics), "down" fails when it shrinks below
+# baseline/ratio (benefit metrics).  "imbalance" keeps its bare legacy key
+# so the committed baseline's existing entries stay valid verbatim; the
+# newer metrics are key-prefixed ("drop_rate/<method>", ...).
+GATED_METRICS = {
+    "imbalance": ("up", ""),
+    "drop_rate": ("up", "drop_rate/"),
+    "rel_throughput": ("down", "rel_throughput/"),
+}
+
+
+def iter_gated(merged: dict):
+    """Yield ((bench, scenario, key), value, direction) for every gated
+    metric entry; `key` is the method name under the metric's prefix."""
     for bench, report in merged.items():
         for scen, entry in report.get("scenarios", {}).items():
-            for method, val in entry.get("imbalance", {}).items():
-                yield (bench, scen, method), float(val)
+            for metric, (direction, prefix) in GATED_METRICS.items():
+                for method, val in entry.get(metric, {}).items():
+                    yield (bench, scen, prefix + method), float(val), direction
 
 
 def compare(current: dict, baseline: dict, max_ratio: float, floor: float):
-    base = dict(iter_imbalances(baseline))
+    base = {key: val for key, val, _ in iter_gated(baseline)}
     regressions = []
-    for key, val in iter_imbalances(current):
+    for key, val, direction in iter_gated(current):
         if key not in base:
             continue  # new scenario/method: no baseline yet, not a regression
-        limit = max(max_ratio * base[key], floor)
-        if val > limit:
-            regressions.append((key, base[key], val, limit))
+        if direction == "up":
+            limit = max(max_ratio * base[key], floor)
+            if val > limit:
+                regressions.append((key, base[key], val, limit))
+        else:
+            limit = base[key] / max_ratio
+            if limit > floor and val < limit:
+                regressions.append((key, base[key], val, limit))
     return regressions
 
 
 def missing_entries(current: dict, baseline: dict) -> list[tuple[str, str, str]]:
-    """Baseline (bench, scenario, method) keys absent from the candidate.
+    """Baseline (bench, scenario, key) entries absent from the candidate.
 
     A renamed or dropped bench must not silently leave the gate: every entry
     the baseline covers has to show up in the merged report, or the baseline
     has to be regenerated deliberately (see module docstring)."""
-    cur = dict(iter_imbalances(current))
-    return [key for key in dict(iter_imbalances(baseline)) if key not in cur]
+    cur = {key for key, _, _ in iter_gated(current)}
+    return [key for key, _, _ in iter_gated(baseline) if key not in cur]
 
 
 def failed_checks(merged: dict) -> list[tuple[str, str]]:
@@ -105,9 +135,10 @@ def main(argv=None) -> int:
         baseline = json.loads(Path(args.baseline).read_text())
         regressions = compare(merged, baseline, args.max_ratio, args.floor)
         for (bench, scen, method), b, v, lim in regressions:
+            worse = ">" if v > lim else "<"
             print(
-                f"REGRESSION: {bench}/{scen}/{method}: imbalance {v:.4g} "
-                f"> limit {lim:.4g} (baseline {b:.4g} x {args.max_ratio})"
+                f"REGRESSION: {bench}/{scen}/{method}: {v:.4g} "
+                f"{worse} limit {lim:.4g} (baseline {b:.4g}, ratio {args.max_ratio})"
             )
             rc = 1
         missing = missing_entries(merged, baseline)
@@ -119,8 +150,8 @@ def main(argv=None) -> int:
             )
             rc = 1
         if not regressions and not missing:
-            n = len(dict(iter_imbalances(merged)))
-            print(f"no regressions across {n} imbalance entries")
+            n = len({key for key, _, _ in iter_gated(merged)})
+            print(f"no regressions across {n} gated entries")
     return rc
 
 

@@ -22,6 +22,7 @@ from benchmarks import (
     bench_fig9,
     bench_kernels,
     bench_moe_balance,
+    bench_moe_train,
     bench_scale_choices,
     bench_serving,
     bench_storm_sim,
@@ -41,6 +42,7 @@ MODULES = [
     ("theory", bench_theory),
     ("heavy_hitters", bench_heavy_hitters),
     ("moe_balance", bench_moe_balance),
+    ("moe_train", bench_moe_train),
     ("batched_fidelity", bench_batched_fidelity),
     ("kernels", bench_kernels),
     ("scale_choices", bench_scale_choices),

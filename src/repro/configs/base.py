@@ -31,10 +31,14 @@ class ModelConfig:
     # MoE
     n_experts: int = 0
     top_k: int = 0
-    router: str = "topk_aux"  # topk_aux | pkg_potc
+    router: str = "topk_aux"  # topk_aux | pkg_potc | d_choices | w_choices
     capacity_factor: float = 1.25
     aux_loss_coef: float = 0.01
     pkg_block: int = 256  # token block for PKG-PoTC batch-greedy routing
+    # adaptive routers (d_choices/w_choices): candidate-lane ceiling and
+    # SPACESAVING expert-popularity summary size (0 -> n_experts, exact)
+    router_d_max: int = 4
+    router_ss_capacity: int = 0
     # SSM (mamba2)
     ssm_expand: int = 2
     ssm_state: int = 0

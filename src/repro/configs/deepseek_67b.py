@@ -2,6 +2,12 @@
 
 llama-architecture (pre-norm RMSNorm, SwiGLU, RoPE), untied embeddings.
 [arXiv:2401.02954]
+
+Also registers deepseek-moe-16b, the family's fine-grained MoE sibling
+(64 routed experts, top-6, narrow d_ff per expert — the many-small-experts
+regime where router skew is most damaging and the adaptive d_choices /
+w_choices modes have the most headroom; shared experts are omitted, routed
+path only).  [arXiv:2401.06066]
 """
 from repro.configs.base import ModelConfig, register
 
@@ -20,5 +26,28 @@ CONFIG = register(
         rope_base_global=10_000.0,
         mlp="swiglu",
         tie_embeddings=False,
+    )
+)
+
+MOE_CONFIG = register(
+    ModelConfig(
+        name="deepseek-moe-16b",
+        family="moe",
+        n_layers=28,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        head_dim=128,
+        d_ff=1408,
+        vocab_size=102400,
+        attn_pattern=("global",),
+        rope_base_global=10_000.0,
+        mlp="swiglu",
+        tie_embeddings=False,
+        n_experts=64,
+        top_k=6,
+        router="topk_aux",
+        capacity_factor=1.25,
+        router_d_max=4,  # 6 slots x 4 candidates = 24 ranked experts of 64
     )
 )

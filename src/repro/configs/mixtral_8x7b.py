@@ -1,7 +1,9 @@
 """mixtral-8x7b [moe]: 32L d=4096 32H (GQA kv=8) d_ff=14336/expert vocab=32000.
 
 8 experts top-2 — the exact two-choice shape of the paper; PKG-PoTC routing
-(router="pkg_potc") is a drop-in replacement for aux-loss balancing here.
+(router="pkg_potc") is a drop-in replacement for aux-loss balancing here, and
+the adaptive modes (router="d_choices"/"w_choices", DESIGN.md §3.3) widen hot
+experts' tokens to router_d_max candidates / spill them globally.
 Sliding-window attention 4096. [arXiv:2401.04088]
 """
 from repro.configs.base import ModelConfig, register
@@ -26,5 +28,6 @@ CONFIG = register(
         top_k=2,
         router="topk_aux",
         capacity_factor=1.25,
+        router_d_max=4,  # d_choices ceiling: top-4 ranked experts per slot
     )
 )

@@ -1,7 +1,8 @@
 """olmoe-1b-7b [moe]: 16L d=2048 16H (MHA kv=16) d_ff=1024/expert vocab=50304.
 
 64 experts, top-8 routing, qk-norm, full attention, SwiGLU experts.
-PKG-PoTC routing selectable (router="pkg_potc") — see DESIGN.md §3.2.
+PKG-PoTC routing selectable (router="pkg_potc"), as are the skew-adaptive
+modes (router="d_choices"/"w_choices") — see DESIGN.md §3.2/§3.3.
 [arXiv:2409.02060]
 """
 from repro.configs.base import ModelConfig, register
@@ -25,5 +26,6 @@ CONFIG = register(
         top_k=8,
         router="topk_aux",
         capacity_factor=1.25,
+        router_d_max=4,  # 8 slots x 4 candidates = 32 ranked experts of 64
     )
 )

@@ -298,7 +298,7 @@ class _DevicePolicy(RoutingPolicy):
     def __init__(self, n_replicas: int, d: int = 2, seed: int = 0,
                  capacity: int = 1024, theta: Optional[float] = None,
                  min_count: int = 8, block: int = 128,
-                 interpret: bool = True):
+                 interpret: Optional[bool] = None):
         super().__init__(n_replicas, d=d, seed=seed)
         self.capacity = capacity
         self.theta = theta

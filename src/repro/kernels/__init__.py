@@ -7,6 +7,7 @@ from repro.kernels.ops import (
     adaptive_route_online,
     flash_attention,
     interpret_mode,
+    moe_adaptive_dispatch,
     moe_pkg_dispatch,
     pkg_route,
     rmsnorm,

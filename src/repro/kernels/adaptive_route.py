@@ -6,19 +6,25 @@ vector, vector blocks of V lanes) but the number of candidates is
 n_cand (N,) with values in [1, d_max] (produced by the SPACESAVING head
 tracker, DESIGN.md SS3.3).  All d_max hashes are always computed and padded
 into the one-hot matmul — the TPU-native formulation of DESIGN.md SS2/SS7 is
-preserved — and candidates j >= n_cand[i] are masked to +BIG before the
+preserved — and candidates j >= n_cand[i] are masked to +MASK before the
 lane-wise argmin, so tail keys (n_cand == 2) reproduce plain PKG bit-exactly.
 
 W-CHOICES ("head goes anywhere", arXiv 1510.05714) is in-kernel too: with
 the static opt-in w_mode=True (set by the W-named wrappers below), a key
 whose n_cand equals estimation.W_SENTINEL skips the hashed-candidate argmin
 and routes by a *global* masked argmin over the full (1, n_workers) loads row
-(pad lanes hold the 1e30 sentinel, ties break to the lowest worker index), so
+(pad lanes hold the MASK sentinel, ties break to the lowest worker index), so
 n_workers need not be a power of two nor fit one VPU lane group.  The r-th
 head lane of a block takes the r-th argmin of the sequential water-fill of
-that row — computed loop-free by one stable sort (_waterfill_picks) — so head
+that row — computed loop-free by one stable sort (waterfill_picks) — so head
 messages reproduce w_choices_partition's global step exactly from block-start
 loads instead of piling a whole block onto a single stale minimum.
+
+The per-block machinery (hash, one-hot load fetch, mask, argmin, water-fill,
+histogram update) all lives in kernels/route_core.py — ONE routing core
+shared with pkg_route.py, moe_pkg_dispatch.py, and every ref.py oracle —
+this module only wires chunk/block iteration and the head-table plumbing
+around route_core.route_block:
 
   hash   : SplitMix32 over (key ^ seed_j), j < d_max      (VPU int ops)
   lookup : one-hot(cand) @ loads                          (MXU matmul)
@@ -31,6 +37,7 @@ loads instead of piling a whole block onto a single stale minimum.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -38,97 +45,19 @@ from jax import lax
 from jax.experimental import pallas as pl
 
 from repro.core.estimation import W_SENTINEL
-from repro.core.hashing import derive_seeds, splitmix32
+from repro.core.hashing import derive_seeds
+from repro.kernels.platform import resolve_interpret
+from repro.kernels.route_core import (
+    hash_candidates,
+    head_table_ncand,
+    route_block,
+    waterfill_picks,
+)
 
-# Mask sentinel: 1e30 is > any reachable load and fp32-exact; ref.py uses the
-# same literal so kernel and oracle stay bit-identical.
-
-_LANES = 128  # VPU lane width the global reduction pads to
-
-
-def _waterfill_picks(loads, *, n_workers, block):
-    """First `block` picks of sequential global-argmin routing from the
-    (1, n_workers) loads row: pick r is where the r-th head message of a
-    block goes, with every earlier pick's unit load accounted.
-
-    Pick 0 is the masked global argmin — worker lanes padded to a _LANES
-    multiple with the 1e30 mask sentinel (pad lanes can never win the min),
-    ties broken to the lowest worker index, exactly w_choices_partition's
-    `jnp.argmin(loads)` step.  The full sequence needs no sequential loop:
-    worker j's t-th pick happens at running load L_j + t, and "repeatedly
-    take the min, add one" selects the multiset {(L_j + t, j) : t >= 0} in
-    ascending (value, j) order — the block smallest entries of the
-    (W_pad, block) value matrix flattened j-major, via lax.top_k on the
-    negated values (top_k surfaces the lowest flat index first on ties, so
-    ties land on the lowest worker, then ascending t, matching argmin's
-    first-index rule at every step).  Loads are integer counts in f32, so
-    values and ties are IEEE-exact; the ref.py oracle imports this function
-    so kernel and oracle cannot drift.
-
-    Returns picks (block,) int32 worker ids.
-    """
-    pad = -n_workers % _LANES
-    row = loads
-    if pad:
-        row = jnp.concatenate(
-            [row, jnp.full((1, pad), 1e30, jnp.float32)], axis=1
-        )
-    t = jnp.arange(block, dtype=jnp.float32)
-    vals = row.reshape(n_workers + pad, 1) + t[None, :]  # (W_pad, B): (j, t)
-    _, idx = lax.top_k(-vals.reshape(-1), block)  # ties -> j-major
-    return (idx // block).astype(jnp.int32)
-
-
-def _route_block(kb, nc, seeds, loads, *, n_workers, d_max, block, w_mode):
-    """The shared masked-greedy routing core for one vector block.
-
-    kb (V,) int32 keys, nc (V,) int32 candidate counts, loads (1, n) f32.
-    Returns (choice (V,) int32, new loads).  Both kernels call this — the
-    per-key-ncand and the head-table variants differ ONLY in how nc is
-    produced — so sentinel/tie-break/update semantics cannot drift apart.
-
-    With w_mode (static), lanes with nc == W_SENTINEL take the W-Choices
-    path: the r-th such lane of the block gets the r-th water-fill argmin of
-    the block-start loads row (_waterfill_picks), so consecutive head
-    messages spread exactly as the sequential global-argmin would.  Tail
-    lanes still read block-start loads only — the same < block staleness
-    contract as the load vector itself (DESIGN.md SS2).  w_mode=False skips
-    the reduction entirely for callers that never emit the sentinel
-    (D-Choices tables); sentinel-free streams route identically either way.
-    """
-    wid = jnp.arange(n_workers, dtype=jnp.int32)
-    col = jnp.arange(d_max, dtype=jnp.int32)
-    h = splitmix32(kb.astype(jnp.uint32)[:, None] ^ seeds[None, :])  # (V, d_max)
-    cand = (h % jnp.uint32(n_workers)).astype(jnp.int32)  # (V, d_max)
-    onehot_c = (cand[..., None] == wid).astype(jnp.float32)  # (V, d_max, n)
-    lc = jax.lax.dot_general(
-        onehot_c.reshape(block * d_max, n_workers),
-        loads.reshape(n_workers, 1),
-        (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    ).reshape(block, d_max)
-    is_w = nc == jnp.int32(W_SENTINEL)  # (V,) head-goes-anywhere flag
-    nc_tail = jnp.where(is_w, d_max, nc) if w_mode else nc
-    lc = jnp.where(col[None, :] < nc_tail[:, None], lc, 1e30)
-    sel = jnp.argmin(lc, axis=-1)  # (V,)
-    choice = jnp.take_along_axis(cand, sel[:, None], axis=-1)[:, 0]
-    if w_mode:
-        # W path: head rank within the block -> water-fill pick, fetched with
-        # a one-hot matmul (gather-free, DESIGN.md SS7; picks < n_workers are
-        # f32-exact).  rank < block always: at most block head lanes precede.
-        rank = jnp.cumsum(is_w.astype(jnp.int32)) - is_w  # (V,)
-        picks = _waterfill_picks(loads, n_workers=n_workers, block=block)
-        blk = jnp.arange(block, dtype=jnp.int32)
-        onehot_r = (rank[:, None] == blk[None, :]).astype(jnp.float32)  # (V, B)
-        head_choice = jax.lax.dot_general(
-            onehot_r,
-            picks.astype(jnp.float32).reshape(block, 1),
-            (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        ).reshape(block).astype(jnp.int32)
-        choice = jnp.where(is_w, head_choice, choice)
-    hist = (choice[:, None] == wid).astype(jnp.float32).sum(axis=0)
-    return choice, loads + hist[None, :]
+# Long-standing private names, re-exported for existing importers (tests,
+# ref.py): the implementations moved verbatim to route_core.
+_waterfill_picks = waterfill_picks
+_head_table_ncand = head_table_ncand
 
 
 def _kernel(keys_ref, ncand_ref, seeds_ref, assign_ref, loads_ref, *,
@@ -140,9 +69,9 @@ def _kernel(keys_ref, ncand_ref, seeds_ref, assign_ref, loads_ref, *,
     def body(i, loads):  # loads (1, n_workers) f32
         kb = keys_ref[pl.ds(i * block, block)]  # (V,)
         nc = ncand_ref[pl.ds(i * block, block)]  # (V,)
-        choice, loads = _route_block(
-            kb, nc, seeds, loads, n_workers=n_workers, d_max=d_max,
-            block=block, w_mode=w_mode,
+        cand = hash_candidates(kb, seeds, n_workers)  # (V, d_max)
+        choice, _, _, loads = route_block(
+            cand, nc, loads, n_entities=n_workers, w_mode=w_mode
         )
         assign_ref[pl.ds(i * block, block)] = choice
         return loads
@@ -165,7 +94,7 @@ def adaptive_route(
     seed: int = 0,
     chunk: int = 1024,
     block: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     w_mode: bool = False,
 ):
     """Route keys (N,) int32 with per-key candidate counts n_cand (N,).
@@ -174,10 +103,11 @@ def adaptive_route(
     routes that key to the globally least-loaded worker (W-Choices; see
     w_route for the flag-based wrapper, which sets w_mode itself).  Returns
     (assign (N,), per-chunk loads (N/chunk, n_workers)).  N must divide by
-    chunk; chunk by block.  interpret=True on CPU.  The default w_mode=False
-    keeps the sentinel check and the water-fill reduction out of the inner
-    loop — D-Choices callers never emit the sentinel and pay nothing;
-    sentinel-free streams route bit-identically under both settings.
+    chunk; chunk by block.  interpret=None resolves via kernels.platform
+    (compile on TPU, interpret elsewhere).  The default w_mode=False keeps
+    the sentinel check and the water-fill reduction out of the inner loop —
+    D-Choices callers never emit the sentinel and pay nothing; sentinel-free
+    streams route bit-identically under both settings.
     """
     N = keys.shape[0]
     assert N % chunk == 0 and chunk % block == 0, (N, chunk, block)
@@ -201,7 +131,7 @@ def adaptive_route(
             jax.ShapeDtypeStruct((N,), jnp.int32),
             jax.ShapeDtypeStruct((N // chunk, n_workers), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(keys.astype(jnp.int32), n_cand.astype(jnp.int32), derive_seeds(seed, d_max))
     return assign, loads
 
@@ -219,17 +149,6 @@ def adaptive_route(
 # ---------------------------------------------------------------------------
 
 
-def _head_table_ncand(kb, tk, tn, d_base, d_max):
-    """Per-lane candidate count from a head-table snapshot: (V, H) equality
-    compare + masked max (no gather); a miss or a tail hit yields d_base.
-    A W_SENTINEL table entry (any_worker head tables) passes through
-    unclipped, flagging the global-argmin path to _route_block."""
-    hit = kb[:, None] == tk[None, :]  # (V, H)
-    nc = jnp.max(jnp.where(hit, tn, 0), axis=1)  # (V,) 0 on miss
-    clipped = jnp.clip(jnp.where(nc > 0, nc, d_base), d_base, d_max)
-    return jnp.where(nc == jnp.int32(W_SENTINEL), nc, clipped)
-
-
 def _kernel_online(keys_ref, tblk_ref, tbln_ref, seeds_ref, assign_ref,
                    loads_ref, *, n_workers, d_base, d_max, block, w_mode):
     chunk = keys_ref.shape[0]
@@ -241,10 +160,10 @@ def _kernel_online(keys_ref, tblk_ref, tbln_ref, seeds_ref, assign_ref,
         kb = keys_ref[pl.ds(i * block, block)]  # (V,) int32
         tk = tblk_ref[pl.ds(i, 1), :].reshape(H)  # (H,) int32 head-table keys
         tn = tbln_ref[pl.ds(i, 1), :].reshape(H)  # (H,) int32 head-table d(k)
-        nc = _head_table_ncand(kb, tk, tn, d_base, d_max)
-        choice, loads = _route_block(
-            kb, nc, seeds, loads, n_workers=n_workers, d_max=d_max,
-            block=block, w_mode=w_mode,
+        nc = head_table_ncand(kb, tk, tn, d_base, d_max)
+        cand = hash_candidates(kb, seeds, n_workers)  # (V, d_max)
+        choice, _, _, loads = route_block(
+            cand, nc, loads, n_entities=n_workers, w_mode=w_mode
         )
         assign_ref[pl.ds(i * block, block)] = choice
         return loads
@@ -270,7 +189,7 @@ def adaptive_route_online(
     seed: int = 0,
     chunk: int = 1024,
     block: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     w_mode: bool = False,
 ):
     """Route keys (N,) against per-block head tables (N/block, H).
@@ -312,7 +231,7 @@ def adaptive_route_online(
             jax.ShapeDtypeStruct((N,), jnp.int32),
             jax.ShapeDtypeStruct((N // chunk, n_workers), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(
         keys.astype(jnp.int32),
         tbl_keys.astype(jnp.int32),
@@ -335,7 +254,7 @@ def w_route(
     seed: int = 0,
     chunk: int = 1024,
     block: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ):
     """W-Choices Pallas router: head keys (is_head != 0) go to the globally
     least-loaded worker via the in-kernel global argmin; tail keys take PKG's

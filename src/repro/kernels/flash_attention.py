@@ -15,11 +15,14 @@ a multiple of 128 (e.g. danube's hd=80).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.platform import resolve_interpret
 
 NEG_INF = -1e30
 
@@ -95,12 +98,13 @@ def flash_attention(
     window: int = 0,
     bq: int = 128,
     bk: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ):
     """q (B,S,H,hd), k/v (B,T,Kv,hd) -> (B,S,H,hd).
 
     S and T must divide by bq / bk.  q positions are aligned to the *end* of
-    the key range (q row s has absolute position s + T - S).
+    the key range (q row s has absolute position s + T - S).  interpret=None
+    resolves via kernels.platform (compile on TPU, interpret elsewhere).
     """
     B, S, H, hd = q.shape
     T, Kv = k.shape[1], k.shape[2]
@@ -132,6 +136,6 @@ def flash_attention(
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q, k, v)
     return out

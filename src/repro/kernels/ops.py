@@ -1,12 +1,11 @@
 """Public jit'd wrappers for the Pallas kernels.
 
-On CPU (this container) kernels execute in interpret mode; on TPU the same
-calls compile natively.  `use_kernels()` is the production switch consulted
-by higher layers.
+Every entry point defaults interpret=None, resolved per-call by
+kernels.platform (compile natively on TPU, interpret elsewhere) — callers no
+longer need to thread the flag.  `use_kernels()` / `interpret_mode()` are the
+production switches consulted by higher layers.
 """
 from __future__ import annotations
-
-import jax
 
 from repro.kernels.adaptive_route import (
     adaptive_route,
@@ -14,8 +13,9 @@ from repro.kernels.adaptive_route import (
     w_route,
 )
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.moe_pkg_dispatch import moe_pkg_dispatch
+from repro.kernels.moe_pkg_dispatch import moe_adaptive_dispatch, moe_pkg_dispatch
 from repro.kernels.pkg_route import pkg_route
+from repro.kernels.platform import interpret_default as interpret_mode
 from repro.kernels.rmsnorm import rmsnorm
 
 __all__ = [
@@ -23,13 +23,9 @@ __all__ = [
     "adaptive_route_online",
     "w_route",
     "flash_attention",
+    "moe_adaptive_dispatch",
     "moe_pkg_dispatch",
     "pkg_route",
     "rmsnorm",
     "interpret_mode",
 ]
-
-
-def interpret_mode() -> bool:
-    """True when Pallas must run in interpret mode (non-TPU backends)."""
-    return jax.default_backend() != "tpu"

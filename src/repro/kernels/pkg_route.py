@@ -3,7 +3,9 @@
 Grid: one program per chunk of C keys.  Each program is an independent
 local load estimator (paper §3.2): its (1, n_workers) fp32 load vector lives
 in VMEM scratch and starts at zero.  Inside, keys are processed in vector
-blocks of V lanes:
+blocks of V lanes by the shared routing core (kernels/route_core.py — the
+same route_block that powers adaptive_route.py and moe_pkg_dispatch.py,
+called here with nc=None: every candidate lane live, no mask materialised):
 
   hash   : SplitMix32 over (key ^ seed_j) per choice j        (VPU int ops)
   lookup : one-hot(cand) @ loads                              (MXU matmul)
@@ -17,38 +19,31 @@ TPU-native formulation (DESIGN.md §2, §7).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.hashing import derive_seeds, splitmix32
+from repro.core.hashing import derive_seeds
+from repro.kernels.platform import resolve_interpret
+from repro.kernels.route_core import hash_candidates, route_block
 
 
 def _kernel(keys_ref, seeds_ref, assign_ref, loads_ref, *, n_workers, d, block):
     chunk = keys_ref.shape[0]
     nblk = chunk // block
     seeds = seeds_ref[...]  # (d,) uint32
-    wid = jnp.arange(n_workers, dtype=jnp.int32)
 
     def body(i, loads):  # loads (1, n_workers) f32
-        kb = keys_ref[pl.ds(i * block, block)].astype(jnp.uint32)  # (V,)
-        h = splitmix32(kb[:, None] ^ seeds[None, :])  # (V, d)
-        cand = (h % jnp.uint32(n_workers)).astype(jnp.int32)  # (V, d)
-        onehot_c = (cand[..., None] == wid).astype(jnp.float32)  # (V, d, n)
-        lc = jax.lax.dot_general(
-            onehot_c.reshape(block * d, n_workers),
-            loads.reshape(n_workers, 1),
-            (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        ).reshape(block, d)
-        sel = jnp.argmin(lc, axis=-1)  # (V,)
-        choice = jnp.take_along_axis(cand, sel[:, None], axis=-1)[:, 0]
+        kb = keys_ref[pl.ds(i * block, block)]  # (V,)
+        cand = hash_candidates(kb, seeds, n_workers)  # (V, d)
+        choice, _, _, loads = route_block(
+            cand, None, loads, n_entities=n_workers, w_mode=False
+        )
         assign_ref[pl.ds(i * block, block)] = choice
-        hist = (choice[:, None] == wid).astype(jnp.float32).sum(axis=0)
-        return loads + hist[None, :]
+        return loads
 
     loads = lax.fori_loop(0, nblk, body, jnp.zeros((1, n_workers), jnp.float32))
     loads_ref[...] = loads
@@ -64,11 +59,12 @@ def pkg_route(
     seed: int = 0,
     chunk: int = 1024,
     block: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ):
     """Route keys (N,) int32 -> (assign (N,), per-chunk loads (N/chunk, n)).
 
-    N must divide by chunk; chunk by block.  interpret=True on CPU.
+    N must divide by chunk; chunk by block.  interpret=None resolves via
+    kernels.platform (compile on TPU, interpret elsewhere).
     """
     N = keys.shape[0]
     assert N % chunk == 0 and chunk % block == 0, (N, chunk, block)
@@ -89,6 +85,6 @@ def pkg_route(
             jax.ShapeDtypeStruct((N,), jnp.int32),
             jax.ShapeDtypeStruct((N // chunk, n_workers), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(keys.astype(jnp.int32), derive_seeds(seed, d))
     return assign, loads

@@ -1,0 +1,26 @@
+"""Platform detection for the Pallas kernels: ONE place decides interpret mode.
+
+Every kernel entry point takes ``interpret: bool | None = None`` and resolves
+it through `resolve_interpret`, so TPU runs compile natively by default while
+CPU CI (and any other non-TPU backend) stays in interpreter mode — no caller
+has to know which backend it is on, and no kernel can hard-code a default
+that silently de-optimises TPU.  Pass an explicit bool to override (e.g. the
+interpret-vs-compiled bit-exactness checks in bench_kernels.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+__all__ = ["interpret_default", "resolve_interpret"]
+
+
+def interpret_default() -> bool:
+    """True when Pallas must run in interpret mode (non-TPU backends)."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """None -> platform default (compile on TPU, interpret elsewhere)."""
+    return interpret_default() if interpret is None else bool(interpret)

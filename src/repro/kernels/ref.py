@@ -2,6 +2,13 @@
 
 Each `ref_*` mirrors the kernel contract exactly, including tie-breaking
 (argmin -> first candidate) and block-staleness semantics of the PKG routers.
+The routing oracles are all built on kernels/route_core.oracle_block_step —
+the gather-based host twin of the kernels' route_block — so the mask /
+W-sentinel / water-fill / tie-break semantics are SHARED with the kernels
+(one implementation, it cannot drift) while the load fetch and the W pick
+deliberately use plain indexing instead of the kernels' one-hot matmuls:
+the differential tests check the MXU formulation against straightforward
+gathers.
 """
 from __future__ import annotations
 
@@ -11,6 +18,7 @@ from jax import lax
 
 from repro.core.estimation import W_SENTINEL
 from repro.core.hashing import hash_choices
+from repro.kernels.route_core import head_table_ncand, oracle_block_step
 
 
 def ref_pkg_route(keys, n_workers: int, d: int = 2, seed: int = 0,
@@ -27,11 +35,10 @@ def ref_pkg_route(keys, n_workers: int, d: int = 2, seed: int = 0,
 
     def chunk_fn(cand_c):
         def step(loads, cb):  # cb (block, d)
-            lc = loads[cb]  # (block, d)
-            sel = jnp.argmin(lc, axis=-1)
-            choice = jnp.take_along_axis(cb, sel[:, None], axis=-1)[:, 0]
-            hist = jax.nn.one_hot(choice, n_workers, dtype=jnp.float32).sum(0)
-            return loads + hist, choice
+            loads, choice, _, _ = oracle_block_step(
+                loads, cb, None, n_entities=n_workers, w_mode=False
+            )
+            return loads, choice
 
         loads0 = jnp.zeros((n_workers,), jnp.float32)
         loads, choices = lax.scan(step, loads0, cand_c)
@@ -41,44 +48,12 @@ def ref_pkg_route(keys, n_workers: int, d: int = 2, seed: int = 0,
     return assign.reshape(-1).astype(jnp.int32), loads
 
 
-def _masked_block_step(loads, cb, ncb, n_workers: int, d_max: int,
-                       w_mode: bool = False):
-    """One vector block of the masked batch-greedy: the shared oracle core
-    for both adaptive routers (1e30 sentinel, first-index tie-break).
-
-    With w_mode, lanes with ncb == W_SENTINEL take the W-Choices path: the
-    r-th such lane gets the r-th sequential global-argmin (water-fill) of the
-    block-start loads row.  The picks come from the kernel's own
-    adaptive_route._waterfill_picks, so oracle and kernel share one
-    implementation of the reduction's sentinel/tie-break contract;
-    w_mode=False skips it for sentinel-free candidate counts, exactly
-    mirroring the kernel's static flag."""
-    from repro.kernels.adaptive_route import _waterfill_picks
-
-    block = cb.shape[0]
-    col = jnp.arange(d_max, dtype=jnp.int32)
-    lc = loads[cb]  # (block, d_max)
-    is_w = ncb == jnp.int32(W_SENTINEL)
-    nc_tail = jnp.where(is_w, d_max, ncb) if w_mode else ncb
-    lc = jnp.where(col[None, :] < nc_tail[:, None], lc, jnp.float32(1e30))
-    sel = jnp.argmin(lc, axis=-1)
-    choice = jnp.take_along_axis(cb, sel[:, None], axis=-1)[:, 0]
-    if w_mode:
-        rank = jnp.cumsum(is_w.astype(jnp.int32)) - is_w
-        picks = _waterfill_picks(
-            loads[None, :], n_workers=n_workers, block=block
-        )
-        choice = jnp.where(is_w, picks[rank], choice)
-    hist = jax.nn.one_hot(choice, n_workers, dtype=jnp.float32).sum(0)
-    return loads + hist, choice
-
-
 def ref_adaptive_route(keys, n_cand, n_workers: int, d_max: int = 4,
                        seed: int = 0, chunk: int = 1024, block: int = 128,
                        w_mode: bool = False):
     """Chunked batch-greedy with per-key candidate counts
-    (matches kernels/adaptive_route.py, including the 1e30 mask sentinel and,
-    with w_mode=True, the W_SENTINEL water-fill path).
+    (matches kernels/adaptive_route.py, including the route_core MASK
+    sentinel and, with w_mode=True, the W_SENTINEL water-fill path).
 
     Returns (assign (N,), loads (N//chunk, n_workers))."""
     N = keys.shape[0]
@@ -90,7 +65,10 @@ def ref_adaptive_route(keys, n_cand, n_workers: int, d_max: int = 4,
     def chunk_fn(cand_c, nc_c):
         def step(loads, inp):  # cb (block, d_max), ncb (block,)
             cb, ncb = inp
-            return _masked_block_step(loads, cb, ncb, n_workers, d_max, w_mode)
+            loads, choice, _, _ = oracle_block_step(
+                loads, cb, ncb, n_entities=n_workers, w_mode=w_mode
+            )
+            return loads, choice
 
         loads0 = jnp.zeros((n_workers,), jnp.float32)
         loads, choices = lax.scan(step, loads0, (cand_c, nc_c))
@@ -106,12 +84,10 @@ def ref_adaptive_route_online(keys, tbl_keys, tbl_ncand, n_workers: int,
                               w_mode: bool = False):
     """Chunked batch-greedy against per-block head tables
     (matches kernels/adaptive_route.py::adaptive_route_online; the table
-    lookup is literally the kernel's _head_table_ncand and the greedy core
-    is the shared _masked_block_step).
+    lookup is literally the kernels' head_table_ncand and the greedy core
+    is the shared oracle_block_step).
 
     Returns (assign (N,), loads (N//chunk, n_workers))."""
-    from repro.kernels.adaptive_route import _head_table_ncand
-
     N = keys.shape[0]
     H = tbl_keys.shape[1]
     assert N % chunk == 0 and chunk % block == 0
@@ -124,8 +100,11 @@ def ref_adaptive_route_online(keys, tbl_keys, tbl_ncand, n_workers: int,
     def chunk_fn(cand_c, kb_c, tk_c, tn_c):
         def step(loads, inp):
             cb, kbb, tkb, tnb = inp  # (block,d_max) (block,) (H,) (H,)
-            nc = _head_table_ncand(kbb, tkb, tnb, d_base, d_max)
-            return _masked_block_step(loads, cb, nc, n_workers, d_max, w_mode)
+            nc = head_table_ncand(kbb, tkb, tnb, d_base, d_max)
+            loads, choice, _, _ = oracle_block_step(
+                loads, cb, nc, n_entities=n_workers, w_mode=w_mode
+            )
+            return loads, choice
 
         loads0 = jnp.zeros((n_workers,), jnp.float32)
         loads, choices = lax.scan(step, loads0, (cand_c, kb_c, tk_c, tn_c))
@@ -156,12 +135,28 @@ def ref_w_route_online(keys, tbl_keys, tbl_ncand, n_workers: int,
     estimation.online_head_tables(any_worker=True), whose W_SENTINEL entries
     route through the global argmin.  Identical code to
     ref_adaptive_route_online with w_mode=True — the sentinel handling lives
-    in the shared _masked_block_step/_head_table_ncand pair — named
+    in the shared oracle_block_step/head_table_ncand pair — named
     separately so callers state which contract they exercise."""
     return ref_adaptive_route_online(
         keys, tbl_keys, tbl_ncand, n_workers, d_base=d_base, d_max=d_max,
         seed=seed, chunk=chunk, block=block, w_mode=True,
     )
+
+
+def _ref_dispatch_block(loads, cand, gate, nc, *, n_experts, w_mode):
+    """One MoE token block through the shared oracle core: flatten the k
+    slots into blk*k lanes, route, gather the winning gate (spilled W lanes
+    keep their slot's top-ranked gate — the kernel's contract)."""
+    blk, k, C = cand.shape
+    cand_f = cand.reshape(blk * k, C)
+    gate_f = gate.reshape(blk * k, C)
+    loads, choice, sel, is_w = oracle_block_step(
+        loads, cand_f, nc, n_entities=n_experts, w_mode=w_mode
+    )
+    gsel = jnp.take_along_axis(gate_f, sel[:, None], axis=-1)[:, 0]
+    if w_mode:
+        gsel = jnp.where(is_w, gate_f[:, 0], gsel)
+    return loads, choice.reshape(blk, k), gsel.reshape(blk, k)
 
 
 def ref_moe_pkg_dispatch(cand, cgate, n_experts: int, block: int = 256):
@@ -177,15 +172,48 @@ def ref_moe_pkg_dispatch(cand, cgate, n_experts: int, block: int = 256):
 
     def step(loads, inp):
         c, g = inp
-        lc = loads[c]  # (block,k,2)
-        sel = jnp.argmin(lc, axis=-1)
-        idx = jnp.take_along_axis(c, sel[..., None], axis=-1)[..., 0]
-        gsel = jnp.take_along_axis(g, sel[..., None], axis=-1)[..., 0]
-        hist = jax.nn.one_hot(idx.reshape(-1), n_experts, dtype=jnp.float32).sum(0)
-        return loads + hist, (idx, gsel)
+        loads, idx, gsel = _ref_dispatch_block(
+            loads, c, g, None, n_experts=n_experts, w_mode=False
+        )
+        return loads, (idx, gsel)
 
     loads0 = jnp.zeros((n_experts,), jnp.float32)
     loads, (idx, gates) = lax.scan(step, loads0, (cand_b, gate_b))
+    return idx.reshape(T, k), gates.reshape(T, k), loads
+
+
+def ref_moe_adaptive_dispatch(cand, cgate, tbl_keys, tbl_ncand,
+                              n_experts: int, d_base: int = 2, d_max: int = 4,
+                              block: int = 256, w_mode: bool = False):
+    """Oracle for kernels/moe_pkg_dispatch.py::moe_adaptive_dispatch — and
+    THE host routing path of models.moe's d_choices/w_choices router modes
+    (models.moe._adaptive_choose wraps this, so layer, kernel, and oracle
+    share one choose implementation; it is differentiable w.r.t. cgate).
+
+    cand/cgate (T, k, d_max), tbl_keys/tbl_ncand (T/block, H) expert-
+    popularity head tables.  Returns (idx (T,k), gates (T,k), loads (E,)).
+    """
+    T, k, C = cand.shape
+    H = tbl_keys.shape[1]
+    assert T % block == 0, (T, block)
+    assert tbl_keys.shape == (T // block, H) == tbl_ncand.shape
+    cand_b = cand.astype(jnp.int32).reshape(T // block, block, k, C)
+    gate_b = cgate.reshape(T // block, block, k, C)
+    tk = tbl_keys.astype(jnp.int32)
+    tn = tbl_ncand.astype(jnp.int32)
+
+    def step(loads, inp):
+        c, g, tkb, tnb = inp  # (block,k,C) (block,k,C) (H,) (H,)
+        pref = c[:, 0, 0]  # token's preferred (top-ranked) expert
+        nc_tok = head_table_ncand(pref, tkb, tnb, d_base, d_max)
+        nc = jnp.broadcast_to(nc_tok[:, None], (block, k)).reshape(block * k)
+        loads, idx, gsel = _ref_dispatch_block(
+            loads, c, g, nc, n_experts=n_experts, w_mode=w_mode
+        )
+        return loads, (idx, gsel)
+
+    loads0 = jnp.zeros((n_experts,), jnp.float32)
+    loads, (idx, gates) = lax.scan(step, loads0, (cand_b, gate_b, tk, tn))
     return idx.reshape(T, k), gates.reshape(T, k), loads
 
 

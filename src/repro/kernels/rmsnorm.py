@@ -2,10 +2,13 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.platform import resolve_interpret
 
 
 def _kernel(x_ref, w_ref, o_ref, *, eps):
@@ -21,9 +24,12 @@ def rmsnorm(
     w: jnp.ndarray,
     block_rows: int = 256,
     eps: float = 1e-6,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ):
-    """x (..., D), w (D,) -> same shape; rows tiled in blocks of block_rows."""
+    """x (..., D), w (D,) -> same shape; rows tiled in blocks of block_rows.
+
+    interpret=None resolves via kernels.platform (compile on TPU, interpret
+    elsewhere)."""
     shape = x.shape
     D = shape[-1]
     x2 = x.reshape(-1, D)
@@ -41,6 +47,6 @@ def rmsnorm(
         ],
         out_specs=pl.BlockSpec((br, D), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x2, w)
     return out[:R].reshape(shape)

@@ -1,0 +1,202 @@
+"""THE shared block-routing core: one masked-greedy implementation for every
+Pallas router and its host oracle.
+
+Three consumers share this module verbatim (DESIGN.md SS3.3 "One routing-
+kernel substrate"):
+
+  kernels/pkg_route.py          — plain 2-choice PKG over hashed candidates
+  kernels/adaptive_route.py     — D-/W-Choices with data-dependent candidate
+                                  counts / per-block head-table snapshots
+  kernels/moe_pkg_dispatch.py   — MoE expert dispatch (PKG-PoTC and the
+                                  adaptive D-/W-Choices variants), where the
+                                  "workers" are experts and each token block
+                                  carries k slots of router-ranked candidates
+
+plus every matching `ref_*` oracle in kernels/ref.py and the host router
+modes in models/moe.py.  The kernel-side `route_block` speaks the TPU-native
+formulation (one-hot-matmul load fetch + histogram update, no gathers); the
+host-side `oracle_block_step` is the gather-based twin with identical mask /
+sentinel / tie-break semantics.  Both import `waterfill_picks` and
+`head_table_ncand` from here, so the W-sentinel water-fill and the head-table
+lookup cannot drift between any kernel and any oracle — the bit-exactness
+contracts in tests/test_kernels.py all reduce to this one module.
+
+Vocabulary: `n_entities` is the number of routing targets — stream workers
+for the routers, experts for MoE dispatch.  Loads are integer counts in f32
+(IEEE-exact), the mask sentinel is 1e30 (greater than any reachable load),
+and every argmin breaks ties to the lowest index.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.estimation import W_SENTINEL
+from repro.core.hashing import splitmix32
+
+__all__ = [
+    "LANES",
+    "MASK",
+    "hash_candidates",
+    "waterfill_picks",
+    "head_table_ncand",
+    "route_block",
+    "oracle_block_step",
+]
+
+# Mask sentinel: 1e30 is > any reachable load and fp32-exact; kernels and
+# oracles both read it from here so they stay bit-identical.
+MASK = 1e30
+
+LANES = 128  # VPU lane width the global reduction pads to
+
+
+def hash_candidates(kb, seeds, n_entities: int):
+    """SplitMix32 candidate ids for a block of keys: (V,) x (d,) -> (V, d).
+
+    The d seeds come from core.hashing.derive_seeds; the family is
+    prefix-stable in d, so a d_max-wide candidate table masked down to its
+    first 2 lanes reproduces plain PKG's candidates exactly.
+    """
+    h = splitmix32(kb.astype(jnp.uint32)[:, None] ^ seeds[None, :])  # (V, d)
+    return (h % jnp.uint32(n_entities)).astype(jnp.int32)
+
+
+def waterfill_picks(loads, *, n_workers, block):
+    """First `block` picks of sequential global-argmin routing from the
+    (1, n_workers) loads row: pick r is where the r-th head message of a
+    block goes, with every earlier pick's unit load accounted.
+
+    Pick 0 is the masked global argmin — worker lanes padded to a LANES
+    multiple with the MASK sentinel (pad lanes can never win the min),
+    ties broken to the lowest worker index, exactly w_choices_partition's
+    `jnp.argmin(loads)` step.  The full sequence needs no sequential loop:
+    worker j's t-th pick happens at running load L_j + t, and "repeatedly
+    take the min, add one" selects the multiset {(L_j + t, j) : t >= 0} in
+    ascending (value, j) order — the block smallest entries of the
+    (W_pad, block) value matrix flattened j-major, via lax.top_k on the
+    negated values (top_k surfaces the lowest flat index first on ties, so
+    ties land on the lowest worker, then ascending t, matching argmin's
+    first-index rule at every step).  Loads are integer counts in f32, so
+    values and ties are IEEE-exact; every oracle imports this function so
+    kernel and oracle cannot drift.
+
+    Returns picks (block,) int32 worker ids.
+    """
+    pad = -n_workers % LANES
+    row = loads
+    if pad:
+        row = jnp.concatenate(
+            [row, jnp.full((1, pad), MASK, jnp.float32)], axis=1
+        )
+    t = jnp.arange(block, dtype=jnp.float32)
+    vals = row.reshape(n_workers + pad, 1) + t[None, :]  # (W_pad, B): (j, t)
+    _, idx = lax.top_k(-vals.reshape(-1), block)  # ties -> j-major
+    return (idx // block).astype(jnp.int32)
+
+
+def head_table_ncand(kb, tk, tn, d_base, d_max):
+    """Per-lane candidate count from a head-table snapshot: (V, H) equality
+    compare + masked max (no gather); a miss or a tail hit yields d_base.
+    A W_SENTINEL table entry (any_worker head tables) passes through
+    unclipped, flagging the global-argmin path to route_block."""
+    hit = kb[:, None] == tk[None, :]  # (V, H)
+    nc = jnp.max(jnp.where(hit, tn, 0), axis=1)  # (V,) 0 on miss
+    clipped = jnp.clip(jnp.where(nc > 0, nc, d_base), d_base, d_max)
+    return jnp.where(nc == jnp.int32(W_SENTINEL), nc, clipped)
+
+
+def _mask_and_flag(lc, nc, d_max: int, w_mode: bool):
+    """Shared mask step: candidate lane j of a row participates iff
+    j < nc (W-sentinel rows keep all d_max tail lanes live under w_mode, the
+    global pick overrides below).  nc=None means every lane participates
+    (plain fixed-d routing) — no mask is materialised at all."""
+    if nc is None:
+        return lc, None
+    is_w = nc == jnp.int32(W_SENTINEL)
+    nc_tail = jnp.where(is_w, d_max, nc) if w_mode else nc
+    col = jnp.arange(d_max, dtype=jnp.int32)
+    return jnp.where(col[None, :] < nc_tail[:, None], lc, jnp.float32(MASK)), is_w
+
+
+def route_block(cand, nc, loads, *, n_entities, w_mode):
+    """The kernel-side masked-greedy routing core for one vector block.
+
+    cand (V, d_max) int32 candidate entity ids, nc (V,) int32 candidate
+    counts (or None: all d_max lanes live), loads (1, n_entities) f32.
+    Returns (choice (V,), sel (V,), is_w (V,) or None, new loads).  `sel` is
+    the winning candidate column (MoE dispatch gathers the matching gate with
+    it); `is_w` flags the lanes the W path overrode (their `sel` is
+    meaningless).  Every Pallas router calls this — the callers differ ONLY
+    in how cand/nc are produced — so sentinel/tie-break/update semantics
+    cannot drift apart.
+
+    Loads are fetched and written back MXU-style: one-hot(cand) @ loads for
+    the candidate lookup, ones @ one-hot(choice) for the histogram update —
+    no gathers or scatters (DESIGN.md SS2/SS7).
+
+    With w_mode (static), lanes with nc == W_SENTINEL take the W-Choices
+    path: the r-th such lane of the block gets the r-th water-fill argmin of
+    the block-start loads row (waterfill_picks), so consecutive head
+    messages spread exactly as the sequential global-argmin would.  Tail
+    lanes still read block-start loads only — the same < block staleness
+    contract as the load vector itself (DESIGN.md SS2).  w_mode=False skips
+    the reduction entirely for callers that never emit the sentinel;
+    sentinel-free streams route identically either way.
+    """
+    V, d_max = cand.shape
+    eid = jnp.arange(n_entities, dtype=jnp.int32)
+    onehot_c = (cand[..., None] == eid).astype(jnp.float32)  # (V, d_max, n)
+    lc = jax.lax.dot_general(
+        onehot_c.reshape(V * d_max, n_entities),
+        loads.reshape(n_entities, 1),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(V, d_max)
+    lc, is_w = _mask_and_flag(lc, nc, d_max, w_mode)
+    sel = jnp.argmin(lc, axis=-1)  # (V,) ties -> first candidate
+    choice = jnp.take_along_axis(cand, sel[:, None], axis=-1)[:, 0]
+    if w_mode:
+        # W path: head rank within the block -> water-fill pick, fetched with
+        # a one-hot matmul (gather-free, DESIGN.md SS7; picks < n_entities
+        # are f32-exact).  rank < V always: at most V head lanes precede.
+        rank = jnp.cumsum(is_w.astype(jnp.int32)) - is_w  # (V,)
+        picks = waterfill_picks(loads, n_workers=n_entities, block=V)
+        lane = jnp.arange(V, dtype=jnp.int32)
+        onehot_r = (rank[:, None] == lane[None, :]).astype(jnp.float32)  # (V, V)
+        head_choice = jax.lax.dot_general(
+            onehot_r,
+            picks.astype(jnp.float32).reshape(V, 1),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).reshape(V).astype(jnp.int32)
+        choice = jnp.where(is_w, head_choice, choice)
+    hist = (choice[:, None] == eid).astype(jnp.float32).sum(axis=0)
+    return choice, sel, is_w, loads + hist[None, :]
+
+
+def oracle_block_step(loads, cand, nc, *, n_entities, w_mode):
+    """The host-side (gather-based) twin of route_block — one vector block of
+    the masked batch-greedy, shared by every ref.py oracle and the host MoE
+    router modes.  loads (n_entities,) f32, cand (V, d_max), nc (V,) or None.
+    Returns (new_loads, choice, sel, is_w).
+
+    The fetch is a plain gather (loads[cand]) and the W pick a plain indexed
+    read — deliberately a DIFFERENT formulation from the kernel's one-hot
+    matmuls, so the differential tests check the MXU formulation against
+    straightforward indexing while the mask/sentinel/tie-break logic stays
+    shared (same _mask_and_flag, same waterfill_picks)."""
+    d_max = cand.shape[-1]
+    lc = loads[cand]  # (V, d_max)
+    lc, is_w = _mask_and_flag(lc, nc, d_max, w_mode)
+    sel = jnp.argmin(lc, axis=-1)
+    choice = jnp.take_along_axis(cand, sel[:, None], axis=-1)[:, 0]
+    if w_mode:
+        rank = jnp.cumsum(is_w.astype(jnp.int32)) - is_w
+        picks = waterfill_picks(
+            loads[None, :], n_workers=n_entities, block=cand.shape[0]
+        )
+        choice = jnp.where(is_w, picks[rank], choice)
+    hist = jax.nn.one_hot(choice, n_entities, dtype=jnp.float32).sum(0)
+    return loads + hist, choice, sel, is_w

@@ -5,6 +5,8 @@ Examples:
       --steps 100 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
   PYTHONPATH=src python -m repro.launch.train --arch mixtral-8x7b --tiny \
       --router pkg_potc --steps 50
+  PYTHONPATH=src python -m repro.launch.train --arch olmoe-1b-7b --tiny \
+      --router w_choices --steps 2   # adaptive W-Choices expert routing
 
 On a real TPU slice this same entry point runs the production mesh
 (--mesh data,model); on CPU it defaults to a single device.  Fault tolerance:
@@ -24,7 +26,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--tiny", action="store_true", help="reduced same-family config")
-    ap.add_argument("--router", default=None, choices=[None, "topk_aux", "pkg_potc"])
+    ap.add_argument(
+        "--router",
+        default=None,
+        choices=[None, "topk_aux", "pkg_potc", "d_choices", "w_choices"],
+    )
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)

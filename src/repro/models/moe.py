@@ -1,15 +1,33 @@
-"""Mixture-of-Experts layer with two routers:
+"""Mixture-of-Experts layer with four routers:
 
-  topk_aux  — standard softmax top-k + Switch-style load-balancing aux loss
-              (the baseline the paper's KG corresponds to: router's preference
-              is followed regardless of load).
-  pkg_potc  — PARTIAL KEY GROUPING routing (the paper's technique as a
-              first-class MoE feature): for each of the k slots, the token's
-              two candidate experts are its next-two ranked experts; the token
-              goes to the *less loaded* candidate, where load is a running
-              token count maintained per token block (batch-greedy local
-              estimation, DESIGN.md §2).  Balance is structural, so no aux
-              loss and far fewer capacity drops.
+  topk_aux   — standard softmax top-k + Switch-style load-balancing aux loss
+               (the baseline the paper's KG corresponds to: router's
+               preference is followed regardless of load).
+  pkg_potc   — PARTIAL KEY GROUPING routing (the paper's technique as a
+               first-class MoE feature): for each of the k slots, the token's
+               two candidate experts are its next-two ranked experts; the
+               token goes to the *less loaded* candidate, where load is a
+               running token count maintained per token block (batch-greedy
+               local estimation, DESIGN.md §2).  Balance is structural, so no
+               aux loss and far fewer capacity drops.
+  d_choices  — skew-adaptive candidate counts (arXiv 1510.05714): an online
+               SPACESAVING summary of *expert popularity* (keys = the
+               router's top-ranked expert per token, tracked in the scan
+               carry by core.estimation.online_head_tables) widens hot
+               experts' tokens to d(e) <= router_d_max candidate lanes out of
+               their d_max router-ranked experts; cold-expert tokens keep the
+               exact 2-choice PKG step.
+  w_choices  — same summary with any_worker=True: tokens preferring a *head*
+               expert spill to ANY expert via the capacity-aware water-fill
+               global argmin, so a hot-expert token flood spreads over the
+               emptiest experts.  Tail tokens use the same rank pairs as
+               pkg_potc (an all-tail stream is bit-identical to it).
+
+The d/w modes route through kernels.ref.ref_moe_adaptive_dispatch — the host
+twin of the Pallas kernels.moe_adaptive_dispatch, both built on
+kernels/route_core.py — so the layer, the kernel, and the oracle share ONE
+choose implementation (differentiable w.r.t. the gate values; routing indices
+carry no gradients, as in pkg_potc).
 
 Dispatch is capacity-based (GShard layout): tokens are scattered to
 (E, C, d) buffers, expert-GEMM'd, and combined with the (renormalized) gate
@@ -24,6 +42,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.estimation import online_head_tables
 from repro.parallel.spec import ParamDef
 
 
@@ -70,6 +89,60 @@ def _pkg_choose(cand, cgate, n_experts: int, block: int):
     return idx.reshape(-1, k)[:T], gates.reshape(-1, k)[:T]
 
 
+def expert_head_tables(pref, n_experts: int, block: int, d_base: int = 2,
+                       d_max: int = 4, capacity: int = 0,
+                       any_worker: bool = False, min_count: int = 8):
+    """Per-block EXPERT-popularity head tables for adaptive MoE routing.
+
+    pref (T,) int32 is the stream of router-preferred (top-ranked) expert ids;
+    the online SPACESAVING summary runs over it in a lax.scan carry
+    (core.estimation.online_head_tables) and emits, per token block, the
+    state *before* that block — head verdicts stale by at most `block`
+    tokens, the same contract as the dispatch loads.  capacity=0 defaults to
+    n_experts: the summary is then EXACT counts (at most E distinct keys).
+    With any_worker=True head slots carry W_SENTINEL (consume with
+    w_mode=True).  Returns (tbl_keys, tbl_ncand), each (T/block, capacity).
+    """
+    cap = capacity if capacity > 0 else n_experts
+    return online_head_tables(
+        pref, block, cap, n_experts, d=d_base, d_max=d_max,
+        min_count=min_count, any_worker=any_worker,
+    )
+
+
+def _adaptive_choose(cand, cgate, n_experts: int, block: int, d_base: int,
+                     d_max: int, w_mode: bool, capacity: int = 0):
+    """D-/W-Choices expert choice: the host path of the unified routing
+    substrate.  cand/cgate (T, k, C) router-ranked candidates per slot.
+
+    Builds expert-popularity head tables from the preferred-expert stream,
+    then routes through kernels.ref.ref_moe_adaptive_dispatch — the same
+    shared-core implementation the Pallas moe_adaptive_dispatch kernel is
+    differentially tested against — so there is exactly one choose
+    implementation to trust.  Differentiable w.r.t. cgate.  Returns
+    (idx (T,k), gates (T,k)).
+    """
+    from repro.kernels.ref import ref_moe_adaptive_dispatch  # models on kernels
+
+    T, k, C = cand.shape
+    nblk = -(-T // block)
+    pad = nblk * block - T
+    # pad candidates with -1: they hash to no expert (empty one-hot /
+    # zero histogram), miss the head table, and sit after every real token
+    cand_p = jnp.pad(cand, ((0, pad), (0, 0), (0, 0)), constant_values=-1)
+    gate_p = jnp.pad(cgate, ((0, pad), (0, 0), (0, 0)))
+    pref = lax.stop_gradient(cand_p[:, 0, 0])
+    tbl_k, tbl_n = expert_head_tables(
+        pref, n_experts, block, d_base=d_base, d_max=d_max,
+        capacity=capacity, any_worker=w_mode,
+    )
+    idx, gates, _ = ref_moe_adaptive_dispatch(
+        cand_p, gate_p, tbl_k, tbl_n, n_experts,
+        d_base=d_base, d_max=d_max, block=block, w_mode=w_mode,
+    )
+    return idx[:T], gates[:T]
+
+
 def route(p, x2d, cfg):
     """x2d (T,d) -> (idx (T,k), gates (T,k), aux_loss scalar)."""
     T = x2d.shape[0]
@@ -81,6 +154,19 @@ def route(p, x2d, cfg):
         cand = topi.reshape(T, k, 2).astype(jnp.int32)
         cgate = topv.reshape(T, k, 2)
         idx, gates = _pkg_choose(cand, cgate, E, cfg.pkg_block)
+        aux = jnp.zeros((), jnp.float32)
+    elif cfg.router in ("d_choices", "w_choices"):
+        w_mode = cfg.router == "w_choices"
+        # W-Choices keeps pkg_potc's rank pairs (all-tail == pkg_potc);
+        # D-Choices widens to d_max ranked candidates per slot.
+        d_max = 2 if w_mode else max(2, min(cfg.router_d_max, E // k))
+        topv, topi = lax.top_k(probs, d_max * k)
+        cand = topi.reshape(T, k, d_max).astype(jnp.int32)
+        cgate = topv.reshape(T, k, d_max)
+        idx, gates = _adaptive_choose(
+            cand, cgate, E, cfg.pkg_block, 2, d_max, w_mode,
+            capacity=cfg.router_ss_capacity,
+        )
         aux = jnp.zeros((), jnp.float32)
     else:
         gates, idx = lax.top_k(probs, k)

@@ -14,9 +14,10 @@ from repro.kernels.adaptive_route import (
     w_route,
 )
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.moe_pkg_dispatch import moe_pkg_dispatch
+from repro.kernels.moe_pkg_dispatch import moe_adaptive_dispatch, moe_pkg_dispatch
 from repro.kernels.pkg_route import pkg_route
 from repro.kernels.rmsnorm import rmsnorm
+from repro.models.moe import _pkg_choose, expert_head_tables
 
 
 @pytest.mark.parametrize("n_workers", [5, 16, 50, 100])
@@ -285,6 +286,105 @@ def test_moe_dispatch_balance_property():
     assert float(loads.max()) / (T * k / E) < 1.7
     naive = jnp.zeros(E).at[ti[:, :k].reshape(-1)].add(1.0)
     assert float(loads.max()) < float(naive.max())
+
+
+def _moe_cands(key, T, E, k, width, skew=3.0):
+    """Router-ranked candidates/gates (T, k, width) with a hot expert 0."""
+    logits = jax.random.normal(key, (T, E)).at[:, 0].add(skew)
+    probs = jax.nn.softmax(logits, -1)
+    tv, ti = jax.lax.top_k(probs, width * k)
+    return ti.reshape(T, k, width).astype(jnp.int32), tv.reshape(T, k, width)
+
+
+@pytest.mark.parametrize(
+    "T,k,E,block", [(512, 1, 8, 128), (1024, 2, 16, 256), (1024, 4, 64, 512)]
+)
+@pytest.mark.parametrize("w_mode,d_max", [(False, 4), (True, 2)])
+def test_moe_adaptive_dispatch_matches_ref(T, k, E, block, w_mode, d_max):
+    """Pallas adaptive dispatch vs the shared-core oracle, with REAL head
+    tables from the preferred-expert stream: capped-count tables (d mode)
+    and sentinel tables (w mode), idx + gates + loads bit-equal."""
+    key = jax.random.PRNGKey(T + k + d_max)
+    cand, cg = _moe_cands(key, T, E, k, d_max)
+    tk, tn = expert_head_tables(
+        cand[:, 0, 0], E, block, d_base=2, d_max=d_max, any_worker=w_mode
+    )
+    out_k = moe_adaptive_dispatch(
+        cand, cg, tk, tn, E, d_base=2, d_max=d_max, block=block, w_mode=w_mode
+    )
+    out_r = ref.ref_moe_adaptive_dispatch(
+        cand, cg, tk, tn, E, d_base=2, d_max=d_max, block=block, w_mode=w_mode
+    )
+    for a, b in zip(out_k, out_r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_moe_dispatch_block1_matches_model_pkg_choose():
+    """With block=1 (no staleness) the kernel, its oracle, and the model
+    layer's _pkg_choose are the same sequential PoTC, token for token —
+    the contract tying models/moe.py to the kernel substrate."""
+    T, k, E = 256, 2, 8
+    cand, cg = _moe_cands(jax.random.PRNGKey(9), T, E, k, 2)
+    i_m, g_m = _pkg_choose(cand, cg, E, block=1)
+    i_r, g_r, l_r = ref.ref_moe_pkg_dispatch(cand, cg, E, block=1)
+    i_k, g_k, l_k = moe_pkg_dispatch(cand, cg, E, block=1)
+    np.testing.assert_array_equal(np.asarray(i_m), np.asarray(i_r))
+    np.testing.assert_array_equal(np.asarray(i_r), np.asarray(i_k))
+    np.testing.assert_array_equal(np.asarray(g_m), np.asarray(g_r))
+    np.testing.assert_array_equal(np.asarray(g_r), np.asarray(g_k))
+    np.testing.assert_array_equal(np.asarray(l_r), np.asarray(l_k))
+    # the model layer's int32 histogram is the f32 loads, exactly
+    counts = np.bincount(np.asarray(i_m).reshape(-1), minlength=E)
+    np.testing.assert_array_equal(counts, np.asarray(l_k).astype(np.int64))
+
+
+def test_moe_adaptive_all_miss_table_is_pkg_dispatch():
+    """All-miss head tables (the all-tail block): every token keeps its
+    d_base=2 rank pair, so the W-mode adaptive dispatch IS plain PKG-PoTC
+    dispatch bit-exactly — kernel and oracle both."""
+    T, k, E, block = 1024, 2, 16, 256
+    cand, cg = _moe_cands(jax.random.PRNGKey(4), T, E, k, 2)
+    tk = jnp.full((T // block, E), -1, jnp.int32)
+    tn = jnp.zeros((T // block, E), jnp.int32)
+    out_a = moe_adaptive_dispatch(
+        cand, cg, tk, tn, E, d_base=2, d_max=2, block=block, w_mode=True
+    )
+    out_p = moe_pkg_dispatch(cand, cg, E, block=block)
+    out_r = ref.ref_moe_pkg_dispatch(cand, cg, E, block=block)
+    for a, p, r in zip(out_a, out_p, out_r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(p))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(r))
+
+
+def test_moe_adaptive_all_head_waterfills_and_ties_ascend():
+    """Every token prefers a sentinel-flagged expert -> the whole stream
+    water-fills: final expert loads within 1 of each other; from zero loads
+    the first block's picks cycle experts in ascending id order (argmin's
+    first-index tie-break — tie-break determinism); spilled lanes keep
+    their slot's top-ranked gate."""
+    T, k, E, block = 512, 2, 8, 128
+    key = jax.random.PRNGKey(6)
+    runner = jax.random.randint(key, (T, k, 1), 0, E, jnp.int32)
+    cand = jnp.concatenate([jnp.zeros((T, k, 1), jnp.int32), runner], -1)
+    cg = jax.nn.softmax(jax.random.normal(key, (T, k, 2)), -1)
+    tk = jnp.full((T // block, E), -1, jnp.int32).at[:, 0].set(0)
+    tn = jnp.zeros((T // block, E), jnp.int32).at[:, 0].set(int(W_SENTINEL))
+    idx, gates, loads = moe_adaptive_dispatch(
+        cand, cg, tk, tn, E, d_base=2, d_max=2, block=block, w_mode=True
+    )
+    i_r, g_r, l_r = ref.ref_moe_adaptive_dispatch(
+        cand, cg, tk, tn, E, d_base=2, d_max=2, block=block, w_mode=True
+    )
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(i_r))
+    np.testing.assert_array_equal(np.asarray(gates), np.asarray(g_r))
+    loads = np.asarray(loads)
+    assert loads.sum() == T * k
+    assert loads.max() - loads.min() <= 1
+    np.testing.assert_array_equal(
+        np.asarray(idx).reshape(-1)[: block * k],
+        np.arange(block * k, dtype=np.int32) % E,
+    )
+    np.testing.assert_array_equal(np.asarray(gates), np.asarray(cg[:, :, 0]))
 
 
 @pytest.mark.parametrize(
