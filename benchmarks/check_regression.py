@@ -14,10 +14,13 @@ and fails the build when, vs the committed baseline
   * any bench's own acceptance checks are false.
 
 Baseline entries missing from the candidate report also fail (a renamed
-bench must not silently leave the gate).  Absolute timings (us_per_msg,
-tokens_per_sec) are machine-dependent and never gated.  An absolute floor
-(--floor) keeps near-zero values (e.g. W-Choices imbalance at ~1e-5, zero
-drop rates) from tripping the ratio on sampling noise.
+bench must not silently leave the gate).  Candidate entries missing from the
+baseline are WARNED and listed: a new bench entry ships un-gated until the
+baseline is regenerated, and that must be a visible decision, not a silent
+default.  Absolute timings (us_per_msg, tokens_per_sec) are
+machine-dependent and never gated.  An absolute floor (--floor) keeps
+near-zero values (e.g. W-Choices imbalance at ~1e-5, zero drop rates) from
+tripping the ratio on sampling noise.
 
 Regenerate the baseline after an intentional change:
 
@@ -27,8 +30,9 @@ Regenerate the baseline after an intentional change:
     PYTHONPATH=src:. python benchmarks/bench_serving.py --quick --out /tmp/v.json
     PYTHONPATH=src:. python benchmarks/bench_moe_balance.py --quick --out /tmp/m.json
     PYTHONPATH=src:. python benchmarks/bench_moe_train.py --quick --out /tmp/t.json
+    PYTHONPATH=src:. python benchmarks/bench_failover_serving.py --quick --out /tmp/fo.json
     python benchmarks/check_regression.py --merge /tmp/s.json /tmp/d.json /tmp/k.json \
-        /tmp/v.json /tmp/m.json /tmp/t.json \
+        /tmp/v.json /tmp/m.json /tmp/t.json /tmp/fo.json \
         --out benchmarks/baselines/BENCH_baseline.json
 """
 from __future__ import annotations
@@ -96,6 +100,17 @@ def missing_entries(current: dict, baseline: dict) -> list[tuple[str, str, str]]
     return [key for key, _, _ in iter_gated(baseline) if key not in cur]
 
 
+def unbaselined_entries(current: dict, baseline: dict) -> list[tuple[str, str, str]]:
+    """Candidate (bench, scenario, key) entries the baseline doesn't cover.
+
+    compare() skips these (no baseline value to ratio against), which means
+    a newly added bench entry ships UN-GATED: it can regress freely until
+    someone regenerates the baseline.  The gate warns and lists them so the
+    un-gated window is a visible decision rather than a silent default."""
+    base = {key for key, _, _ in iter_gated(baseline)}
+    return [key for key, _, _ in iter_gated(current) if key not in base]
+
+
 def failed_checks(merged: dict) -> list[tuple[str, str]]:
     return [
         (bench, name)
@@ -149,9 +164,19 @@ def main(argv=None) -> int:
                 "leaves the gate; regenerate the baseline if intentional"
             )
             rc = 1
+        unbaselined = unbaselined_entries(merged, baseline)
+        for bench, scen, method in unbaselined:
+            print(
+                f"WARNING: {bench}/{scen}/{method} has no baseline entry — "
+                "the new entry ships UN-GATED; regenerate the baseline "
+                "(see module docstring) to bring it under the gate"
+            )
         if not regressions and not missing:
             n = len({key for key, _, _ in iter_gated(merged)})
-            print(f"no regressions across {n} gated entries")
+            gated = n - len(unbaselined)
+            print(f"no regressions across {gated} gated entries"
+                  + (f" ({len(unbaselined)} un-gated, see warnings)"
+                     if unbaselined else ""))
     return rc
 
 

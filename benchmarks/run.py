@@ -13,6 +13,7 @@ import time
 from benchmarks import (
     bench_batched_fidelity,
     bench_drift,
+    bench_failover_serving,
     bench_heavy_hitters,
     bench_fig4,
     bench_fig5,
@@ -48,6 +49,7 @@ MODULES = [
     ("scale_choices", bench_scale_choices),
     ("drift", bench_drift),
     ("serving", bench_serving),
+    ("failover_serving", bench_failover_serving),
 ]
 
 

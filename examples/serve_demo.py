@@ -29,6 +29,11 @@ SCHEDULERS = scheduler_sweep_names()
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--scheduler", default=DEFAULT_SCHEDULER, choices=SCHEDULERS)
+ap.add_argument("--queue-bound", type=int, default=None,
+                help="bounded per-replica FIFO; overflow arrivals are shed")
+ap.add_argument("--kill-at", type=float, default=None, metavar="FRAC",
+                help="kill replica 0 after this fraction of the stream; its "
+                     "pending work drains to the live replicas")
 args = ap.parse_args()
 
 SMOKE = os.environ.get("REPRO_SMOKE") == "1"
@@ -51,25 +56,33 @@ keys, tenants = multi_tenant_stream(
     m, n_tenants=n_tenants, n_keys=m // 20, z=1.6,
     weights=[4, 2, 1, 1], seed=1,
 )
+kill_schedule = None
+if args.kill_at is not None:
+    kill_schedule = [(args.kill_at * m / (0.7 * n_replicas), 0)]
 print(
     f"\nrequest routing: {m} requests, {n_replicas} replicas, "
     f"{n_tenants} tenants, Zipf(1.6) sessions, SLO 0.1"
+    + (f", queue-bound {args.queue_bound}" if args.queue_bound else "")
+    + (f", kill replica 0 @ {args.kill_at:.0%}" if kill_schedule else "")
 )
 print(f"{'scheduler':>12s}  cache-hit  outstanding-imb  routed-imb  "
-      "SLO-viol  fanout")
+      "p99-lat   shed  SLO-viol  fanout")
 for name in SCHEDULERS:
     sched = PolicyScheduler(make_policy(name, n_replicas, d=2, seed=0))
     res = simulate_serving(
         sched, keys, tenants=tenants, utilization=0.7,
         cache_capacity=32, slo=0.1,
+        queue_bound=args.queue_bound, kill_schedule=kill_schedule,
     )
     star = "*" if name == args.scheduler else " "
     print(
         f"{star}{name:>11s}  {res.hit_rate:9.3f}  "
         f"{res.outstanding_imbalance:15.4f}  {res.assign_imbalance:10.4f}  "
+        f"{res.latency_p99:7.2f}  {res.shed:5d}  "
         f"{res.tenant_report['tenants_violating']:>5d}/{n_tenants}  "
         f"{res.session_fanout_max:6d}"
     )
+    assert res.completed + res.shed == m  # zero lost completions
     assert sched.loads.sum() == 0.0  # completions drained the ledger
 
 print(

@@ -37,9 +37,19 @@ def imbalance(loads: np.ndarray) -> float:
 def imbalance_series(
     assign: np.ndarray, n_workers: int, n_checkpoints: int = 100
 ) -> tuple[np.ndarray, np.ndarray]:
-    """I(t) sampled at n_checkpoints points; returns (ts, I(ts))."""
+    """I(t) sampled at n_checkpoints points; returns (ts, I(ts)).
+
+    The first checkpoint is clamped to >= 1: with ``m < n_checkpoints`` the
+    naive ``m // n_checkpoints`` start is 0, and the spurious I(0) = 0 sample
+    would dilute every mean taken over the series (avg_imbalance_fraction,
+    tenant_imbalance_report) for short streams and small tenants.
+    """
     m = len(assign)
-    ts = np.unique(np.linspace(m // n_checkpoints, m, n_checkpoints).astype(np.int64))
+    if m == 0:
+        return np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.float64)
+    ts = np.unique(
+        np.linspace(max(m // n_checkpoints, 1), m, n_checkpoints).astype(np.int64)
+    )
     loads = np.zeros(n_workers, dtype=np.int64)
     out = np.empty(len(ts), dtype=np.float64)
     prev = 0
@@ -55,6 +65,8 @@ def avg_imbalance_fraction(
 ) -> float:
     """Mean_t I(t) / m -- the number reported in paper Table 2 / Fig 4."""
     m = len(assign)
+    if m == 0:
+        return float("nan")
     _, series = imbalance_series(assign, n_workers, n_checkpoints)
     return float(series.mean() / m)
 

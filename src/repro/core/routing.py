@@ -71,27 +71,77 @@ class LoadLedger:
     Every consumer of a policy talks to loads through this class, so the
     "route adds exactly cost, complete releases it, never negative" contract
     is written once instead of per scheduler class.
+
+    Two robustness extensions ride on the same account:
+
+    * ``strict`` — release() normally clamps at zero, which silently masks
+      double-``complete()`` bugs; strict mode raises on over-release instead
+      (beyond a float-accumulation epsilon).  The serving simulator enables
+      it, so its "ledger drains to exactly zero" invariant is enforced, not
+      assumed.
+    * a **live-replica mask** — ``alive`` is a bool vector; ``kill()`` /
+      ``revive()`` flip it, and policies consult it through ``decide`` so a
+      dead replica's keys are drained and redistributed (DESIGN.md §8).
+      ``imbalance()`` is computed over live replicas only: a dead replica's
+      zero load is capacity removed from the cluster, not spare headroom.
     """
 
-    __slots__ = ("loads",)
+    __slots__ = ("loads", "alive", "strict", "_n_dead")
 
-    def __init__(self, n_replicas: int):
+    _EPS = 1e-6  # float accumulation tolerance for strict over-release
+
+    def __init__(self, n_replicas: int, strict: bool = False):
         self.loads = np.zeros(n_replicas, dtype=np.float64)
+        self.alive = np.ones(n_replicas, dtype=bool)
+        self.strict = strict
+        self._n_dead = 0
 
     @property
     def n(self) -> int:
         return len(self.loads)
 
+    @property
+    def any_dead(self) -> bool:
+        return self._n_dead > 0
+
+    def live_mask(self) -> Optional[np.ndarray]:
+        """The alive vector when any replica is dead, else None — the exact
+        argument ``RoutingPolicy.decide`` takes (None keeps the all-alive
+        fast path bit-identical to the pre-failover code)."""
+        return self.alive if self._n_dead else None
+
+    def kill(self, replica: int) -> None:
+        """Mark a replica dead; it stops receiving routes until revive()."""
+        if self.alive[replica]:
+            if self._n_dead == self.n - 1:
+                raise ValueError("cannot kill the last live replica")
+            self.alive[replica] = False
+            self._n_dead += 1
+
+    def revive(self, replica: int) -> None:
+        if not self.alive[replica]:
+            self.alive[replica] = True
+            self._n_dead -= 1
+
     def acquire(self, replica: int, cost: float = 1.0) -> None:
         self.loads[replica] += cost
 
     def release(self, replica: int, cost: float = 1.0) -> None:
-        """Completion event; clamps at zero (over-release is a no-op tail)."""
-        self.loads[replica] = max(0.0, self.loads[replica] - cost)
+        """Completion event; clamps at zero unless ``strict``, which raises
+        on over-release (the signature of a double-complete bug)."""
+        rem = self.loads[replica] - cost
+        if rem < -self._EPS and self.strict:
+            raise ValueError(
+                f"over-release on replica {replica}: outstanding "
+                f"{self.loads[replica]:.6g} < released {cost:.6g} "
+                "(double complete()?)"
+            )
+        self.loads[replica] = max(0.0, rem)
 
     def imbalance(self) -> float:
-        """I(t) = max - avg of the current outstanding work."""
-        return float(self.loads.max() - self.loads.mean())
+        """I(t) = max - avg of the current outstanding work (live replicas)."""
+        live = self.loads[self.alive] if self._n_dead else self.loads
+        return float(live.max() - live.mean())
 
     def imbalance_fraction(self) -> float:
         """I(t) normalized by total outstanding work (0 when idle)."""
@@ -120,8 +170,24 @@ class RoutingPolicy:
     def reset(self) -> None:
         """Clear estimator state (tracker, cursors); loads live elsewhere."""
 
-    def decide(self, key: int, loads: np.ndarray) -> int:
+    def decide(self, key: int, loads: np.ndarray,
+               alive: Optional[np.ndarray] = None) -> int:
+        """One routing decision over a loads vector.
+
+        ``alive`` is the live-replica mask (None == everyone up, the fast
+        path — bit-identical to the pre-failover substrate).  With a mask,
+        every policy must return a live replica: a dead replica's keys are
+        redistributed by the policy's own mechanism (KG rehashes down a
+        deterministic candidate chain, RR skips dead slots, PoTC/W-Choices
+        restrict their least-loaded choice to live candidates and spill to
+        the global live argmin when all d candidates are dead).
+        """
         raise NotImplementedError
+
+    @staticmethod
+    def _live_argmin(loads: np.ndarray, alive: np.ndarray) -> int:
+        """Least-loaded live replica (lowest index ties)."""
+        return int(np.argmin(np.where(alive, loads, np.inf)))
 
     def _batch_costs(self, m: int, costs) -> np.ndarray:
         if costs is None:
@@ -154,12 +220,28 @@ class KGPolicy(RoutingPolicy):
 
     name = "kg"
 
+    # rehash-chain length for failover: P(all chain hops dead) with k of n
+    # replicas down is (k/n)^FAILOVER_CHAIN before the lowest-index fallback
+    FAILOVER_CHAIN = 8
+
     def __init__(self, n_replicas: int, d: int = 2, seed: int = 0):
         super().__init__(n_replicas, d=d, seed=seed)
         self._seeds = derive_seeds_np(seed, 1)
+        self._chain_seeds = derive_seeds_np(seed, 1 + self.FAILOVER_CHAIN)
 
-    def decide(self, key: int, loads: np.ndarray) -> int:
-        return int(_hash_key_np(key, self._seeds, self.n)[0])
+    def decide(self, key: int, loads: np.ndarray,
+               alive: Optional[np.ndarray] = None) -> int:
+        r = int(_hash_key_np(key, self._seeds, self.n)[0])
+        if alive is None or alive[r]:
+            return r
+        # failover: walk a deterministic rehash chain (same SplitMix32
+        # family, extra seeds) so a dead replica's keys scatter across the
+        # cluster instead of piling onto one neighbour; final fallback is
+        # the lowest-index live replica.
+        for r in _hash_key_np(key, self._chain_seeds[1:], self.n):
+            if alive[r]:
+                return int(r)
+        return int(np.argmax(alive))
 
     def route_batch(self, keys, costs=None) -> np.ndarray:
         self.reset()
@@ -185,8 +267,13 @@ class RoundRobinPolicy(RoutingPolicy):
     def reset(self) -> None:
         self._step = 0
 
-    def decide(self, key: int, loads: np.ndarray) -> int:
+    def decide(self, key: int, loads: np.ndarray,
+               alive: Optional[np.ndarray] = None) -> int:
         c = (self._offset + self._step) % self.n
+        if alive is not None:
+            while not alive[c]:  # skip dead slots; cycle stays uniform
+                self._step += 1
+                c = (self._offset + self._step) % self.n
         self._step += 1
         return c
 
@@ -213,9 +300,16 @@ class PoTCPolicy(RoutingPolicy):
     def candidates(self, key: int) -> np.ndarray:
         return _hash_key_np(key, self._seeds, self.n)
 
-    def decide(self, key: int, loads: np.ndarray) -> int:
+    def decide(self, key: int, loads: np.ndarray,
+               alive: Optional[np.ndarray] = None) -> int:
         c = self.candidates(key)
-        return int(c[np.argmin(loads[c])])
+        if alive is None:
+            return int(c[np.argmin(loads[c])])
+        if not alive[c].any():
+            # every candidate is dead: spill to the global live argmin (the
+            # W-Choices move, borrowed as the failover redistribution step)
+            return self._live_argmin(loads, alive)
+        return int(c[np.argmin(np.where(alive[c], loads[c], np.inf))])
 
     def route_batch(self, keys, costs=None) -> np.ndarray:
         self.reset()
@@ -258,11 +352,14 @@ class WChoicesPolicy(PoTCPolicy):
     def is_hot(self, key: int) -> bool:
         return self.tracker.is_head(key, self.theta, min_count=self.min_count)
 
-    def decide(self, key: int, loads: np.ndarray) -> int:
+    def decide(self, key: int, loads: np.ndarray,
+               alive: Optional[np.ndarray] = None) -> int:
         self.tracker.offer(key)
         if self.is_hot(key):
-            return int(np.argmin(loads))
-        return super().decide(key, loads)
+            if alive is None:
+                return int(np.argmin(loads))
+            return self._live_argmin(loads, alive)
+        return super().decide(key, loads, alive)
 
     def route_batch(self, keys, costs=None) -> np.ndarray:
         self.reset()
@@ -306,7 +403,8 @@ class _DevicePolicy(RoutingPolicy):
         self.block = block
         self.interpret = interpret
 
-    def decide(self, key: int, loads: np.ndarray) -> int:
+    def decide(self, key: int, loads: np.ndarray,
+               alive: Optional[np.ndarray] = None) -> int:
         raise NotImplementedError(
             f"{type(self).__name__} is device-backed and batch-only; "
             "use route_batch, or a host policy for per-request serving"

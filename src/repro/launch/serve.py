@@ -37,9 +37,18 @@ def main() -> None:
     ap.add_argument("--scheduler", default=DEFAULT_SCHEDULER, choices=SCHEDULERS,
                     help="routing policy for the detailed run (others are "
                          "printed side by side for comparison)")
-    ap.add_argument("--utilization", type=float, default=0.7)
+    ap.add_argument("--utilization", type=float, default=0.7,
+                    help="offered load as a fraction of aggregate capacity; "
+                         ">= 1 needs --queue-bound (shedding) to stay bounded")
     ap.add_argument("--cache-capacity", type=int, default=64)
     ap.add_argument("--slo", type=float, default=0.1)
+    ap.add_argument("--queue-bound", type=int, default=None,
+                    help="bounded per-replica FIFO: overflow arrivals are "
+                         "shed (queue-based load leveling)")
+    ap.add_argument("--kill-at", type=float, default=None, metavar="FRAC",
+                    help="kill one replica after this fraction of the stream "
+                         "(0-1): its queue drains and redistributes via the "
+                         "live-replica mask")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -67,10 +76,18 @@ def main() -> None:
         n_keys=max(args.requests // 40, 50), z=1.6,
         weights=np.arange(args.tenants, 0, -1), seed=args.seed,
     )
+    kill_schedule = None
+    if args.kill_at is not None:
+        # kill replica 0 after --kill-at of the stream's arrival window
+        dt = 1.0 / (args.utilization * args.replicas)
+        kill_schedule = [(args.kill_at * args.requests * dt, 0)]
     print(
         f"\nrouting {args.requests} requests, {args.replicas} replicas, "
         f"{args.tenants} tenants, util={args.utilization:.0%}, "
-        f"prefix-cache {args.cache_capacity}/replica, SLO {args.slo}:"
+        f"prefix-cache {args.cache_capacity}/replica, SLO {args.slo}"
+        + (f", queue-bound {args.queue_bound}" if args.queue_bound else "")
+        + (f", kill replica 0 @ {args.kill_at:.0%}" if kill_schedule else "")
+        + ":"
     )
     order = [args.scheduler] + [s for s in SCHEDULERS if s != args.scheduler]
     for name in order:
@@ -80,15 +97,19 @@ def main() -> None:
         res = simulate_serving(
             sched, keys, tenants=tenants, utilization=args.utilization,
             cache_capacity=args.cache_capacity, slo=args.slo,
+            queue_bound=args.queue_bound, kill_schedule=kill_schedule,
         )
         star = "*" if name == args.scheduler else " "
         print(
             f" {star}{name:10s} cache-hit={res.hit_rate:.3f}  "
             f"outstanding-imbalance={res.outstanding_imbalance:.4f}  "
             f"routed-work-imbalance={res.assign_imbalance:.4f}  "
+            f"p50/p99 latency={res.latency_p50:.2f}/{res.latency_p99:.2f}  "
+            f"shed={res.shed}  requeued={res.requeued}  "
             f"SLO-violating-tenants={res.tenant_report['tenants_violating']}"
             f"/{args.tenants}  session-fanout<= {res.session_fanout_max}"
         )
+        assert res.completed + res.shed == args.requests, "lost completions"
         assert sched.loads.sum() == 0.0, "drain left outstanding work"
     print(
         "\n(*) = --scheduler selection.  W-Choices keeps cold sessions on "

@@ -57,7 +57,7 @@ class PolicyScheduler:
     its own instance (make_policy is cheap).
     """
 
-    def __init__(self, policy: RoutingPolicy):
+    def __init__(self, policy: RoutingPolicy, strict: bool = False):
         if not policy.per_request:
             raise ValueError(
                 f"policy {policy.name!r} is batch-only (device-backed); "
@@ -65,7 +65,7 @@ class PolicyScheduler:
             )
         policy.reset()  # the adapter==route_batch contract needs fresh state
         self.policy = policy
-        self.ledger = LoadLedger(policy.n)
+        self.ledger = LoadLedger(policy.n, strict=strict)
 
     @property
     def n(self) -> int:
@@ -76,12 +76,22 @@ class PolicyScheduler:
         return self.ledger.loads
 
     def route(self, key: int, cost: float = 1.0) -> int:
-        c = self.policy.decide(int(key), self.ledger.loads)
+        c = self.policy.decide(
+            int(key), self.ledger.loads, self.ledger.live_mask()
+        )
         self.ledger.acquire(c, cost)
         return c
 
     def complete(self, replica: int, cost: float = 1.0) -> None:
         self.ledger.release(replica, cost)
+
+    def kill(self, replica: int) -> None:
+        """Mark a replica dead; subsequent routes avoid it (the simulator
+        additionally requeues its pending work — see serving.sim)."""
+        self.ledger.kill(replica)
+
+    def revive(self, replica: int) -> None:
+        self.ledger.revive(replica)
 
 
 class PoTCScheduler(PolicyScheduler):

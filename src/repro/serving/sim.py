@@ -1,4 +1,5 @@
-"""Discrete-event serving simulator: the closed request/completion loop.
+"""Discrete-event serving simulator: the closed request/completion loop,
+now failure- and overload-aware.
 
 The schedulers' load accounting only means "outstanding work" if something
 ever calls ``complete()`` — this module is that something.  Requests arrive
@@ -15,13 +16,37 @@ its session key is resident on the replica it lands on.  Sticky KG maximizes
 hit-rate and ruins balance under skew; round-robin is the opposite corner;
 PoTC/W-Choices trade between them.  multi-tenant streams additionally get
 per-tenant SLO accounting via core.metrics.tenant_imbalance_report.
+
+**Overload semantics** (queue-based load leveling + throttling): with a
+``queue_bound`` B, a replica admits at most B queued-or-in-service requests;
+an arrival routed to a full replica is **shed** — released from the ledger
+immediately, counted in ``SimResult.shed``, never served.  Shedding makes
+``utilization > 1`` meaningful: the bounded queues clamp per-request latency
+at ~(B · max cost) while the surplus arrivals are rejected, so p99 stays
+bounded where the unbounded simulator's queues (and latencies) diverged
+silently.  Without a queue_bound, ``utilization >= 1`` has no steady state —
+``outstanding_imbalance`` is then dominated by the divergence, and the
+simulator warns.
+
+**Failure semantics**: ``kill_schedule`` is a sequence of (time, replica)
+events.  At a kill, the replica's live-mask bit drops (LoadLedger.kill), its
+prefix cache is wiped, and every request still pending on it is drained and
+**requeued** through ``scheduler.route`` — the policy re-decides under the
+live mask, so each policy redistributes the dead replica's keys by its own
+mechanism (KG rehash chain, RR slot skip, PoTC/W-Choices live-candidate
+argmin; see core.routing).  Requeued requests keep their original arrival
+time, so their enqueue→completion latency includes the redo cost; nothing is
+lost (``completed + shed == m`` always).  ``revive_schedule`` brings a
+replica back with a **cold** cache, so the post-revival hit-rate dip
+measures the cache re-warm cost.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from collections import OrderedDict
-from typing import Optional
+import warnings
+from collections import OrderedDict, deque
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -29,14 +54,16 @@ from repro.core.metrics import avg_imbalance_fraction, tenant_imbalance_report
 
 __all__ = ["SimResult", "simulate_serving"]
 
+Schedule = Sequence[Tuple[float, int]]  # (event time, replica id)
+
 
 @dataclasses.dataclass
 class SimResult:
-    """Everything the benches and demos report (assign/hit are per-request
-    arrays, the rest scalar summaries)."""
+    """Everything the benches and demos report (assign/hit/latency/shed are
+    per-request arrays, the rest scalar summaries)."""
 
-    assign: np.ndarray          # (m,) replica per request
-    hit: np.ndarray             # (m,) bool prefix-cache hit per request
+    assign: np.ndarray          # (m,) replica per request (final, post-requeue)
+    hit: np.ndarray             # (m,) bool prefix-cache hit at admission
     hit_rate: float             # mean(hit)
     assign_imbalance: float     # avg imbalance fraction of routed work
     outstanding_imbalance: float  # mean I(t)/outstanding over post-warmup
@@ -46,7 +73,20 @@ class SimResult:
     session_fanout_max: int     # worst-case replicas touched by one session
     completed: int              # completions delivered to the scheduler
     makespan: float             # last completion time
+    latency: np.ndarray         # (m,) enqueue->completion time; nan if shed
+    latency_p50: float          # percentiles over completed requests
+    latency_p99: float
+    latency_p999: float
+    shed: int                   # requests rejected at a full queue_bound
+    shed_mask: np.ndarray       # (m,) bool, True where the request was shed
+    requeued: int               # pending requests redistributed off dead replicas
+    sample_times: np.ndarray    # outstanding-imbalance sample times (post-warmup)
+    sample_imbalance: np.ndarray  # I(t)/outstanding at those times (live replicas)
     tenant_report: Optional[dict] = None
+
+
+def _percentile(lat: np.ndarray, q: float) -> float:
+    return float(np.percentile(lat, q)) if len(lat) else float("nan")
 
 
 def simulate_serving(
@@ -60,6 +100,10 @@ def simulate_serving(
     slo: float = 0.05,
     sample_every: Optional[int] = None,
     slo_checkpoints: int = 50,
+    queue_bound: Optional[int] = None,
+    kill_schedule: Optional[Schedule] = None,
+    revive_schedule: Optional[Schedule] = None,
+    strict_ledger: bool = True,
 ) -> SimResult:
     """Drive ``scheduler`` (route/complete/loads) through a request stream.
 
@@ -68,8 +112,16 @@ def simulate_serving(
     aggregate service rate; replicas serve FIFO at unit rate, and every
     completion with finish time <= the current arrival is delivered via
     ``scheduler.complete`` before the arrival is routed.  After the last
-    arrival the queue drains fully, so a correct scheduler ends with ~zero
-    outstanding load (asserted in tests, not here).
+    arrival the queue drains fully, so every admitted request completes:
+    ``completed + shed == m`` and a correct scheduler's ledger ends at
+    exactly zero (enforced here when the scheduler carries a LoadLedger —
+    ``strict_ledger`` arms its over-release guard for the run).
+
+    ``queue_bound`` bounds each replica's FIFO (admission control: overflow
+    arrivals are shed); ``kill_schedule`` / ``revive_schedule`` are
+    (time, replica) sequences driving mid-stream replica failure and revival
+    — see the module docstring for the overload and failure semantics.
+    ``utilization >= 1`` without a queue_bound diverges and warns.
 
     With ``tenants`` given, the result carries a per-tenant SLO report
     (core.metrics.tenant_imbalance_report at threshold ``slo``).
@@ -85,65 +137,173 @@ def simulate_serving(
             raise ValueError(f"costs length {len(costs)} != {m}")
     if not 0.0 < utilization:
         raise ValueError(f"utilization must be positive, got {utilization}")
+    if queue_bound is not None and queue_bound < 1:
+        raise ValueError(f"queue_bound must be >= 1, got {queue_bound}")
+    if utilization >= 1.0 and queue_bound is None:
+        warnings.warn(
+            f"utilization={utilization} >= 1 with unbounded queues: offered "
+            "load exceeds aggregate capacity, queues and latencies diverge, "
+            "and outstanding_imbalance measures the divergence rather than "
+            "any steady state — pass queue_bound to shed the surplus",
+            RuntimeWarning,
+            stacklevel=2,
+        )
+    ledger = getattr(scheduler, "ledger", None)
+    if (kill_schedule or revive_schedule) and ledger is None:
+        raise ValueError(
+            "kill/revive schedules need a LoadLedger-backed scheduler "
+            "(PolicyScheduler) so the live-replica mask reaches the policy"
+        )
+    if ledger is not None and strict_ledger:
+        ledger.strict = True
     dt = float(costs.mean()) / (utilization * n)
     if sample_every is None:
         sample_every = max(m // 256, 1)
 
-    heap: list[tuple[float, int, float]] = []  # (finish, replica, cost)
+    # control events: (time, kind, replica); kills sort before revives at
+    # equal times so a kill+revive pair at t is a cache wipe, not a no-op
+    ctrl = deque(sorted(
+        [(float(t), 0, int(r)) for t, r in (kill_schedule or [])]
+        + [(float(t), 1, int(r)) for t, r in (revive_schedule or [])]
+    ))
+
+    # heap entries carry a per-replica generation; a kill bumps gen[r] so
+    # the dead replica's in-flight completions are invalidated in O(1)
+    heap: list[tuple[float, int, int, float, int]] = []  # (fin, r, gen, cost, idx)
+    gen = [0] * n
+    pending: list[deque] = [deque() for _ in range(n)]  # (idx, key, cost) FIFO
     free_at = np.zeros(n, dtype=np.float64)
     caches = [OrderedDict() for _ in range(n)]
     assign = np.empty(m, dtype=np.int32)
     hit = np.zeros(m, dtype=bool)
+    shed_mask = np.zeros(m, dtype=bool)
+    arrival = np.zeros(m, dtype=np.float64)
+    latency = np.full(m, np.nan, dtype=np.float64)
     fanout: dict[int, set] = {}
+    sample_ts: list[float] = []
     samples: list[float] = []
     peak = 0.0
     completed = 0
+    requeued = 0
+    shed = 0
     makespan = 0.0
+
+    def cache_insert(r: int, k: int) -> None:
+        cache = caches[r]
+        cache[k] = True
+        cache.move_to_end(k)
+        if len(cache) > cache_capacity:
+            cache.popitem(last=False)
+
+    def enqueue(idx: int, k: int, c: float, now: float, r: int) -> None:
+        start = max(now, float(free_at[r]))
+        free_at[r] = start + c
+        pending[r].append((idx, k, c))
+        heapq.heappush(heap, (start + c, r, gen[r], c, idx))
+
+    def on_kill(now: float, r: int) -> None:
+        nonlocal requeued, shed, peak
+        ledger.kill(r)
+        gen[r] += 1  # invalidate the dead replica's in-flight completions
+        caches[r].clear()  # revival starts cold: re-warm cost is real
+        victims = list(pending[r])
+        pending[r].clear()
+        free_at[r] = now
+        for idx, k, c in victims:
+            # the work was never completed: release it from the dead replica
+            # and push it back through the policy, which re-decides under
+            # the live mask (train/failover.py's drain-and-redistribute)
+            ledger.release(r, c)
+            r2 = scheduler.route(k, c)
+            requeued += 1
+            assign[idx] = r2
+            fanout.setdefault(k, set()).add(int(r2))
+            if queue_bound is not None and len(pending[r2]) >= queue_bound:
+                scheduler.complete(r2, c)  # backpressure: overflow is shed
+                shed_mask[idx] = True
+                shed += 1
+                continue
+            cache_insert(r2, k)  # the retry's service warms the new replica
+            enqueue(idx, k, c, now, r2)
+            peak = max(peak, float(scheduler.loads[r2]))
+
+    def on_revive(now: float, r: int) -> None:
+        ledger.revive(r)
+        free_at[r] = max(float(free_at[r]), now)
+
+    def advance(now: float) -> None:
+        """Deliver completions and fire control events with time <= now, in
+        global time order (a kill must not requeue work that finished
+        before it)."""
+        nonlocal completed, makespan
+        while heap or ctrl:
+            t_fin = heap[0][0] if heap else np.inf
+            t_ctl = ctrl[0][0] if ctrl else np.inf
+            if min(t_fin, t_ctl) > now:
+                return
+            if t_fin <= t_ctl:
+                fin, r, g, c, idx = heapq.heappop(heap)
+                if g != gen[r]:
+                    continue  # completion of a since-killed replica
+                scheduler.complete(r, c)
+                completed += 1
+                makespan = max(makespan, fin)
+                latency[idx] = fin - arrival[idx]
+                pending[r].popleft()  # heap order == per-replica FIFO order
+            else:
+                t, kind, r = ctrl.popleft()
+                (on_kill if kind == 0 else on_revive)(t, r)
 
     for i in range(m):
         t = i * dt
-        while heap and heap[0][0] <= t:
-            fin, r, c = heapq.heappop(heap)
-            scheduler.complete(r, c)
-            completed += 1
-            makespan = max(makespan, fin)
+        advance(t)
         k = int(keys[i])
         c = float(costs[i])
+        arrival[i] = t
         r = scheduler.route(k, c)
         assign[i] = r
-        cache = caches[r]
-        if k in cache:
-            hit[i] = True
-            cache.move_to_end(k)
+        if queue_bound is not None and len(pending[r]) >= queue_bound:
+            # queue-based load leveling: the replica's bound is hit, shed the
+            # request (ledger sees acquire+release, so loads stay truthful)
+            scheduler.complete(r, c)
+            shed_mask[i] = True
+            shed += 1
         else:
-            cache[k] = True
-            if len(cache) > cache_capacity:
-                cache.popitem(last=False)
-        start = max(t, float(free_at[r]))
-        free_at[r] = start + c
-        heapq.heappush(heap, (start + c, r, c))
-        fanout.setdefault(k, set()).add(int(r))
-        # only replica r's load grew this arrival, so tracking it keeps the
-        # true all-time peak at O(1) per request
-        peak = max(peak, float(scheduler.loads[r]))
+            if k in caches[r]:
+                hit[i] = True
+            cache_insert(r, k)
+            enqueue(i, k, c, t, r)
+            fanout.setdefault(k, set()).add(int(r))
+            # only replica r's load grew this arrival, so tracking it keeps
+            # the true all-time peak at O(1) per request
+            peak = max(peak, float(scheduler.loads[r]))
         if i % sample_every == 0:
             ld = scheduler.loads
+            alive = ledger.alive if ledger is not None else None
+            if alive is not None and not alive.all():
+                ld = ld[alive]  # dead replicas are capacity, not headroom
             # skip the warmup prefix: with < n requests ever routed the
             # fraction is ~(1 - 1/n) for ANY policy (one outstanding request
             # is "imbalanced" by construction), a measurement artifact that
             # would bias well-balanced policies' reported values.
             if i >= n:
+                sample_ts.append(t)
                 samples.append(
                     (float(ld.max()) - float(ld.mean()))
                     / max(float(ld.sum()), 1.0)
                 )
 
-    while heap:  # drain: everything routed eventually completes
-        fin, r, c = heapq.heappop(heap)
-        scheduler.complete(r, c)
-        completed += 1
-        makespan = max(makespan, fin)
+    advance(np.inf)  # drain: everything admitted eventually completes
 
+    if ledger is not None:
+        residual = float(np.abs(ledger.loads).sum())
+        if residual > 1e-6:
+            raise RuntimeError(
+                f"ledger did not drain to zero (residual {residual:.3g}): "
+                "acquire/release accounting lost a completion"
+            )
+
+    done = latency[~np.isnan(latency)]
     report = None
     if tenants is not None:
         report = tenant_imbalance_report(
@@ -162,5 +322,14 @@ def simulate_serving(
         session_fanout_max=max((len(v) for v in fanout.values()), default=0),
         completed=completed,
         makespan=makespan,
+        latency=latency,
+        latency_p50=_percentile(done, 50.0),
+        latency_p99=_percentile(done, 99.0),
+        latency_p999=_percentile(done, 99.9),
+        shed=shed,
+        shed_mask=shed_mask,
+        requeued=requeued,
+        sample_times=np.asarray(sample_ts, dtype=np.float64),
+        sample_imbalance=np.asarray(samples, dtype=np.float64),
         tenant_report=report,
     )

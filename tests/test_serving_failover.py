@@ -1,0 +1,299 @@
+"""Overload control and replica failure at the serving edge (DESIGN.md §8):
+drain invariants across every registered host policy, bounded queues +
+shedding, kill/revive schedules with deterministic replay, and the
+metrics/accounting bugfix sweep (imbalance_series short streams, strict
+ledger release)."""
+import numpy as np
+import pytest
+
+from repro.core.metrics import (
+    avg_imbalance_fraction,
+    imbalance_series,
+    tenant_imbalance_report,
+)
+from repro.core.routing import LoadLedger, host_policy_names, make_policy
+from repro.core.streams import zipf_stream
+from repro.serving import PolicyScheduler, simulate_serving
+
+HOST = host_policy_names()
+
+
+def _sched(name, n, **kw):
+    return PolicyScheduler(make_policy(name, n, d=2, seed=0, **kw))
+
+
+# --- drain invariants across every registered host policy -------------------
+
+
+@pytest.mark.parametrize("name", HOST)
+def test_drain_invariants(name):
+    """completed + shed == m, ledger exactly zero post-drain, makespan covers
+    the last admitted arrival — for every policy in the registry."""
+    keys = zipf_stream(4_000, 300, 1.3, seed=0)
+    n, util = 10, 0.9
+    sched = _sched(name, n)
+    res = simulate_serving(sched, keys, utilization=util, queue_bound=16)
+    m = len(keys)
+    assert res.completed + res.shed == m
+    assert sched.loads.sum() == 0.0
+    assert (sched.loads == 0.0).all()
+    dt = 1.0 / (util * n)
+    admitted = np.flatnonzero(~res.shed_mask)
+    assert res.makespan >= admitted[-1] * dt
+    done = res.latency[~np.isnan(res.latency)]
+    assert len(done) == res.completed
+    assert (done >= 0).all()
+    # percentiles are ordered and positive
+    assert 0 < res.latency_p50 <= res.latency_p99 <= res.latency_p999
+
+
+@pytest.mark.parametrize("name", HOST)
+def test_kill_drain_invariants_and_determinism(name):
+    """A mid-stream kill loses nothing, keeps the ledger clean, never routes
+    to the dead replica afterwards, and replays deterministically."""
+    keys = zipf_stream(5_000, 400, 1.4, seed=1)
+    n, util = 12, 0.8
+    dt = 1.0 / (util * n)
+    t_kill = 2_500 * dt
+
+    def run():
+        sched = _sched(name, n)
+        res = simulate_serving(
+            sched, keys, utilization=util, kill_schedule=[(t_kill, 4)]
+        )
+        assert sched.loads.sum() == 0.0
+        return res
+
+    res, res2 = run(), run()
+    assert res.completed == len(keys)  # zero lost completions, no shedding
+    assert res.shed == 0
+    assert not (res.assign[2_501:] == 4).any()
+    # deterministic replay of the kill schedule
+    np.testing.assert_array_equal(res.assign, res2.assign)
+    np.testing.assert_array_equal(res.latency, res2.latency)
+    np.testing.assert_array_equal(res.shed_mask, res2.shed_mask)
+    assert res.requeued == res2.requeued
+
+
+# --- overload: bounded queues, shedding, latency ----------------------------
+
+
+def test_shedding_bounds_latency_under_overload():
+    """utilization > 1 with a queue bound: the surplus is shed, per-request
+    latency is structurally clamped at (bound x max cost), and the
+    completed/shed split accounts for every request."""
+    keys = zipf_stream(6_000, 500, 1.2, seed=2)
+    sched = _sched("w_choices", 8)
+    res = simulate_serving(sched, keys, utilization=1.5, queue_bound=4)
+    assert res.shed > 0
+    assert res.completed + res.shed == len(keys)
+    # an admitted unit-cost request waits behind at most 4 predecessors
+    assert np.nanmax(res.latency) <= 5.0 + 1e-9
+    assert res.latency_p99 <= 5.0 + 1e-9
+    # balanced policy sheds roughly the true surplus (1 - 1/1.5 ~ 1/3)
+    assert res.shed / len(keys) < 0.5
+
+
+def test_overload_without_bound_warns():
+    keys = np.arange(500)
+    with pytest.warns(RuntimeWarning, match="diverge"):
+        simulate_serving(_sched("rr", 4), keys, utilization=1.2)
+
+
+def test_queue_bound_validation():
+    with pytest.raises(ValueError, match="queue_bound"):
+        simulate_serving(_sched("rr", 4), np.arange(10), queue_bound=0)
+
+
+def test_kill_schedule_requires_ledger():
+    class Bare:  # classic route/complete/loads scheduler, no LoadLedger
+        loads = np.zeros(4)
+
+        def route(self, k, c=1.0):
+            return 0
+
+        def complete(self, r, c=1.0):
+            pass
+
+    with pytest.raises(ValueError, match="LoadLedger"):
+        simulate_serving(Bare(), np.arange(10), kill_schedule=[(1.0, 0)])
+
+
+def test_shed_requests_do_not_touch_caches_or_fanout():
+    """A shed request is never served: it must not warm a cache or count
+    toward session fanout."""
+    keys = np.zeros(100, dtype=np.int64)  # one session, rr sprays it
+    sched = _sched("rr", 4)
+    res = simulate_serving(sched, keys, utilization=3.0, queue_bound=1)
+    admitted = ~res.shed_mask
+    assert res.session_fanout_max <= len(set(res.assign[admitted].tolist()))
+    assert not res.hit[res.shed_mask].any()
+
+
+# --- revival / cache re-warm -------------------------------------------------
+
+
+def test_revive_rejoins_with_cold_cache():
+    """Sticky KG: the killed replica's sessions come back after revival
+    (same hash), but its first hits are misses — the cache was wiped."""
+    keys = zipf_stream(8_000, 200, 1.2, seed=3)
+    n, util = 8, 0.7
+    dt = 1.0 / (util * n)
+    t_kill, t_revive = 3_000 * dt, 4_000 * dt
+    sched = _sched("kg", n)
+    res = simulate_serving(
+        sched, keys, utilization=util, cache_capacity=64,
+        kill_schedule=[(t_kill, 2)], revive_schedule=[(t_revive, 2)],
+    )
+    assert res.completed == len(keys)
+    mid = (res.assign[3_001:4_000] == 2)
+    assert not mid.any()  # dead window: nothing lands on 2
+    back = res.assign[4_001:] == 2
+    assert back.any()  # revived: sticky keys return
+    # the first post-revival request of a session on the revived replica
+    # cannot hit (cache wiped at kill)
+    first_back = np.flatnonzero(res.assign == 2)
+    first_back = first_back[first_back > 4_000][0]
+    assert not res.hit[first_back]
+
+
+# --- live-mask + strict accounting at the ledger level ----------------------
+
+
+def test_ledger_kill_revive_bookkeeping():
+    led = LoadLedger(4)
+    assert led.live_mask() is None  # all-alive fast path
+    led.kill(1)
+    led.kill(2)
+    assert led.any_dead
+    np.testing.assert_array_equal(led.live_mask(), [True, False, False, True])
+    led.revive(1)
+    np.testing.assert_array_equal(led.live_mask(), [True, True, False, True])
+    led.revive(2)
+    assert led.live_mask() is None
+    # killing everything is rejected before the mask goes empty
+    led.kill(0), led.kill(1), led.kill(2)
+    with pytest.raises(ValueError, match="last live replica"):
+        led.kill(3)
+    assert led.alive[3]
+
+
+def test_ledger_imbalance_over_live_replicas_only():
+    led = LoadLedger(4)
+    for r, c in [(0, 8.0), (1, 4.0), (2, 2.0), (3, 2.0)]:
+        led.acquire(r, c)
+    led.kill(0)  # the max-loaded replica is dead: not headroom, not max
+    assert led.imbalance() == pytest.approx(4.0 - (4.0 + 2.0 + 2.0) / 3)
+
+
+def test_strict_ledger_raises_on_over_release():
+    led = LoadLedger(2, strict=True)
+    led.acquire(0, 2.0)
+    led.release(0, 2.0)  # exact: fine
+    with pytest.raises(ValueError, match="over-release"):
+        led.release(0, 1.0)  # double complete
+    # non-strict keeps the legacy clamp-at-zero behavior
+    loose = LoadLedger(2)
+    loose.acquire(0, 1.0)
+    loose.release(0, 5.0)
+    assert loose.loads[0] == 0.0
+
+
+@pytest.mark.parametrize("name", HOST)
+def test_policies_never_route_to_dead_replicas(name):
+    """decide() under a live mask returns live replicas only, for every
+    registered host policy and every single-dead-replica mask."""
+    n = 8
+    pol = make_policy(name, n, d=2, seed=0)
+    pol.reset()
+    rng = np.random.default_rng(0)
+    loads = rng.random(n)
+    for dead in range(n):
+        alive = np.ones(n, dtype=bool)
+        alive[dead] = False
+        for k in range(50):
+            assert pol.decide(int(k), loads, alive) != dead
+
+
+def test_kg_failover_redistributes_not_piles():
+    """KG's rehash chain scatters a dead replica's keys over many survivors
+    (consistent-hash-style), instead of dumping them all on one."""
+    n = 16
+    pol = make_policy("kg", n, seed=0)
+    loads = np.zeros(n)
+    keys = [k for k in range(2_000)
+            if pol.decide(k, loads) == 5]  # keys sticky to replica 5
+    assert len(keys) > 30
+    alive = np.ones(n, dtype=bool)
+    alive[5] = False
+    moved = {pol.decide(k, loads, alive) for k in keys}
+    assert 5 not in moved
+    assert len(moved) > n // 2  # spread, not piled
+    # and the chain is deterministic
+    assert [pol.decide(k, loads, alive) for k in keys[:20]] == \
+        [pol.decide(k, loads, alive) for k in keys[:20]]
+
+
+def test_potc_all_candidates_dead_spills_to_live_argmin():
+    n = 6
+    pol = make_policy("potc", n, d=2, seed=0)
+    loads = np.array([5.0, 4.0, 3.0, 2.0, 1.0, 0.0])
+    for k in range(100):
+        c = pol.candidates(k)
+        alive = np.ones(n, dtype=bool)
+        alive[c] = False  # kill exactly the candidates
+        if not alive.any():
+            continue
+        got = pol.decide(k, loads, alive)
+        expect = int(np.argmin(np.where(alive, loads, np.inf)))
+        assert got == expect
+
+
+def test_rr_skips_dead_and_stays_uniform():
+    n = 6
+    pol = make_policy("rr", n, seed=0)
+    pol.reset()
+    alive = np.ones(n, dtype=bool)
+    alive[[1, 4]] = False
+    out = [pol.decide(0, np.zeros(n), alive) for _ in range(400)]
+    counts = np.bincount(out, minlength=n)
+    assert counts[1] == 0 and counts[4] == 0
+    live = counts[alive]
+    assert live.max() - live.min() <= 1  # uniform over the live set
+
+
+# --- metrics accounting bugfixes (ISSUE satellite) ---------------------------
+
+
+def test_imbalance_series_short_stream_no_t0_checkpoint():
+    """m < n_checkpoints used to emit a spurious I(0)=0 sample at t=0 that
+    diluted every mean over the series; the first checkpoint is now >= 1."""
+    assign = np.zeros(50, dtype=np.int64)  # all on worker 0 of 2
+    ts, series = imbalance_series(assign, 2, n_checkpoints=100)
+    assert ts[0] >= 1
+    assert len(ts) == 50  # checkpoints 1..50, no duplicate 0
+    # pinned: I(t) = t - t/2 = t/2, mean over t=1..50 is 25.5/2
+    assert avg_imbalance_fraction(assign, 2) == pytest.approx(
+        (25.5 / 2) / 50
+    )
+
+
+def test_imbalance_series_empty_stream():
+    ts, series = imbalance_series(np.zeros(0, dtype=np.int64), 4)
+    assert len(ts) == 0 and len(series) == 0
+    assert np.isnan(avg_imbalance_fraction(np.zeros(0, dtype=np.int64), 4))
+
+
+def test_tenant_report_small_tenant_not_diluted():
+    """A tiny tenant (m < n_checkpoints) is scored without the phantom
+    I(0)=0 checkpoint: an all-on-one-replica tenant of 20 messages now
+    reports mean I(t)/t == (1 - 1/n) exactly, which breaks any sane SLO."""
+    m_small = 20
+    assign = np.zeros(m_small, dtype=np.int64)
+    tenants = np.zeros(m_small, dtype=np.int64)
+    rep = tenant_imbalance_report(assign, tenants, 4, slo=0.05,
+                                  n_checkpoints=50)
+    t0 = rep["tenants"][0]
+    assert t0["violated"]
+    assert t0["mean_imbalance_fraction"] == pytest.approx(1 - 1 / 4)
+    assert t0["checkpoint_violations"] == t0["checkpoints"]
