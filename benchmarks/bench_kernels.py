@@ -220,5 +220,8 @@ def run(scale: float = 1.0) -> list[Row]:
     return rows
 
 
+# CI quick scale, shared with benchmarks/run.py --ci-set.
+QUICK_SCALE = 0.1
+
 if __name__ == "__main__":
-    bench_main("kernels", collect, quick_scale=0.1)
+    bench_main("kernels", collect, quick_scale=QUICK_SCALE)

@@ -196,5 +196,8 @@ def run(scale: float = 1.0) -> list[Row]:
     return rows
 
 
+# CI quick scale, shared with benchmarks/run.py --ci-set.
+QUICK_SCALE = 0.25
+
 if __name__ == "__main__":
-    bench_main("moe_balance", collect, quick_scale=0.25)
+    bench_main("moe_balance", collect, quick_scale=QUICK_SCALE)

@@ -187,5 +187,8 @@ def run(scale: float = 1.0) -> list[Row]:
     return rows
 
 
+# CI quick scale, shared with benchmarks/run.py --ci-set.
+QUICK_SCALE = 0.5
+
 if __name__ == "__main__":
-    bench_main("moe_train", collect, quick_scale=0.5)
+    bench_main("moe_train", collect, quick_scale=QUICK_SCALE)

@@ -80,5 +80,8 @@ def run(scale: float = 1.0) -> list[Row]:
     return rows
 
 
+# CI quick scale, shared with benchmarks/run.py --ci-set.
+QUICK_SCALE = 0.05
+
 if __name__ == "__main__":
-    bench_main("scale_choices", collect)
+    bench_main("scale_choices", collect, quick_scale=QUICK_SCALE)

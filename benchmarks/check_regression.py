@@ -5,12 +5,14 @@ into a single BENCH_ci.json artifact (keyed by each report's "bench" field),
 and fails the build when, vs the committed baseline
 (benchmarks/baselines/BENCH_baseline.json):
 
-  * any (bench, scenario, method) "imbalance" or "drop_rate" entry worsens
-    (grows) by more than --max-ratio, or
-  * any "rel_throughput" entry worsens (shrinks) below baseline/--max-ratio —
-    rel_throughput is a same-run ratio (mode tokens/sec over the baseline
-    mode's), so same-machine comparisons are meaningful where absolute
-    tokens/sec would not be, or
+  * any (bench, scenario, method) "imbalance", "imbalance_ratio" or
+    "drop_rate" entry worsens (grows) by more than --max-ratio, or
+  * any "rel_throughput", "keys_per_sec" or "scaling_efficiency" entry
+    worsens (shrinks) below baseline/--max-ratio — all three are same-run
+    ratios (e.g. keys_per_sec is sharded throughput over the same run's
+    single-core PKG throughput, scaling_efficiency is speedup/n_shards), so
+    same-machine comparisons are meaningful where absolute tokens/sec or
+    keys/sec would not be, or
   * any bench's own acceptance checks are false.
 
 Baseline entries missing from the candidate report also fail (a renamed
@@ -22,17 +24,13 @@ machine-dependent and never gated.  An absolute floor (--floor) keeps
 near-zero values (e.g. W-Choices imbalance at ~1e-5, zero drop rates) from
 tripping the ratio on sampling noise.
 
-Regenerate the baseline after an intentional change:
+Regenerate the baseline after an intentional change (the CI quick-bench
+list itself lives in benchmarks/run.py CI_SET; the XLA flag matches ci.yml
+so the sharded-router bench runs on real host devices, not emulation):
 
-    PYTHONPATH=src:. python benchmarks/bench_scale_choices.py --quick --out /tmp/s.json
-    PYTHONPATH=src:. python benchmarks/bench_drift.py --quick --out /tmp/d.json
-    PYTHONPATH=src:. python benchmarks/bench_kernels.py --quick --out /tmp/k.json
-    PYTHONPATH=src:. python benchmarks/bench_serving.py --quick --out /tmp/v.json
-    PYTHONPATH=src:. python benchmarks/bench_moe_balance.py --quick --out /tmp/m.json
-    PYTHONPATH=src:. python benchmarks/bench_moe_train.py --quick --out /tmp/t.json
-    PYTHONPATH=src:. python benchmarks/bench_failover_serving.py --quick --out /tmp/fo.json
-    python benchmarks/check_regression.py --merge /tmp/s.json /tmp/d.json /tmp/k.json \
-        /tmp/v.json /tmp/m.json /tmp/t.json /tmp/fo.json \
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src:. python benchmarks/run.py --quick --ci-set --out /tmp/bench-out
+    python benchmarks/check_regression.py --merge /tmp/bench-out/BENCH_*.json \
         --out benchmarks/baselines/BENCH_baseline.json
 """
 from __future__ import annotations
@@ -58,8 +56,11 @@ def merge_reports(paths: list[str]) -> dict:
 # newer metrics are key-prefixed ("drop_rate/<method>", ...).
 GATED_METRICS = {
     "imbalance": ("up", ""),
+    "imbalance_ratio": ("up", "imbalance_ratio/"),
     "drop_rate": ("up", "drop_rate/"),
     "rel_throughput": ("down", "rel_throughput/"),
+    "keys_per_sec": ("down", "keys_per_sec/"),
+    "scaling_efficiency": ("down", "scaling_efficiency/"),
 }
 
 

@@ -4,8 +4,16 @@ condensed Table 2 + Fig 4 you can eyeball.
 
   PYTHONPATH=src python examples/stream_balance.py
 
+--shards N adds the multi-device sharded router (parallel/sharded_router.py)
+rows: the same streams routed over an N-way ("data",) mesh with load-sync
+epochs every --sync-period blocks.  Run under
+XLA_FLAGS=--xla_force_host_platform_device_count=8 for real devices; with
+fewer devices the bit-exact single-device emulation is used (same
+assignments, flagged in the row name).
+
 REPRO_SMOKE=1 shrinks the dataset scale for CI's examples-smoke job.
 """
+import argparse
 import os
 
 import jax.numpy as jnp
@@ -18,13 +26,27 @@ from repro.core import (
     off_greedy_partition,
     on_greedy_partition,
     pkg_partition,
+    pkg_sharded_partition,
     potc_static_partition,
     simulate_sources,
+    w_choices_sharded_partition,
 )
+
+ap = argparse.ArgumentParser(description=__doc__)
+ap.add_argument("--shards", type=int, default=1,
+                help="route on the sharded router over this many shards")
+ap.add_argument("--sync-period", type=int, default=4,
+                help="blocks between load-sync epochs (with --shards > 1)")
+args = ap.parse_args()
 
 W = 10
 SCALE = 0.001 if os.environ.get("REPRO_SMOKE") == "1" else 0.005
-print(f"{'dataset':8s} {'method':12s} imbalance-fraction")
+if args.shards > 1:
+    import jax
+
+    emulated = args.shards > jax.local_device_count()
+    tag_s = f"-S{args.shards}" + ("(emu)" if emulated else "")
+print(f"{'dataset':8s} {'method':16s} imbalance-fraction")
 for tag in ("WP", "CT", "LN1", "LN2"):
     keys = PAPER_DATASETS[tag].generate(seed=0, scale=SCALE)
     n_keys = int(keys.max()) + 1
@@ -37,6 +59,11 @@ for tag in ("WP", "CT", "LN1", "LN2"):
         "PKG": np.asarray(pkg_partition(ks, W)),
         "PKG-L5": simulate_sources(keys, W, n_sources=5, mode="local"),
     }
+    if args.shards > 1:
+        rows[f"PKG{tag_s}"] = np.asarray(pkg_sharded_partition(
+            ks, W, n_shards=args.shards, sync_period=args.sync_period))
+        rows[f"W{tag_s}"] = np.asarray(w_choices_sharded_partition(
+            ks, W, n_shards=args.shards, sync_period=args.sync_period))
     for name, a in rows.items():
-        print(f"{tag:8s} {name:12s} {avg_imbalance_fraction(a, W):.3e}")
+        print(f"{tag:8s} {name:16s} {avg_imbalance_fraction(a, W):.3e}")
     print()

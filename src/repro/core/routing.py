@@ -57,6 +57,7 @@ __all__ = [
     "WChoicesPolicy",
     "DeviceWChoicesPolicy",
     "DeviceDChoicesPolicy",
+    "ShardedWChoicesPolicy",
     "ROUTING_POLICIES",
     "DEFAULT_SCHEDULER",
     "host_policy_names",
@@ -466,6 +467,38 @@ class DeviceDChoicesPolicy(_DevicePolicy):
         )
 
 
+class ShardedWChoicesPolicy(_DevicePolicy):
+    """W-Choices on the multi-device sharded router (DESIGN.md §6.1): the
+    stream splits over an ``n_shards`` ("data",) mesh, every shard routes
+    against its own local loads row, and the per-shard load deltas psum
+    every ``sync_period`` blocks.  ``n_shards=1, sync_period=1`` is
+    bit-exact to DeviceWChoicesPolicy's single-core kernel path; the mesh
+    is emulated (vmap + sum, bit-identical) when the host has fewer than
+    n_shards devices, so the registered policy runs anywhere."""
+
+    name = "w_choices_sharded"
+
+    def __init__(self, n_replicas: int, d: int = 2, seed: int = 0,
+                 n_shards: int = 1, sync_period: int = 1, **kw):
+        super().__init__(n_replicas, d=d, seed=seed, **kw)
+        self.n_shards = n_shards
+        self.sync_period = sync_period
+
+    def route_batch(self, keys, costs=None) -> np.ndarray:
+        from repro.core.partitioners import w_choices_sharded_partition
+
+        keys = np.asarray(keys).reshape(-1)
+        self._unit_costs(len(keys), costs)
+        return np.asarray(
+            w_choices_sharded_partition(
+                keys, self.n, d=self.d, seed=self.seed, theta=self.theta,
+                capacity=self.capacity, min_count=self.min_count,
+                n_shards=self.n_shards, sync_period=self.sync_period,
+                block=self.block,
+            )
+        )
+
+
 ROUTING_POLICIES = {
     p.name: p
     for p in (
@@ -475,6 +508,7 @@ ROUTING_POLICIES = {
         WChoicesPolicy,
         DeviceWChoicesPolicy,
         DeviceDChoicesPolicy,
+        ShardedWChoicesPolicy,
     )
 }
 

@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+__all__ = ["make_production_mesh", "make_local_mesh", "make_stream_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -17,3 +17,16 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many local devices exist (tests/examples)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_stream_mesh(n_shards: int = 1):
+    """1-D ("data",) mesh for the sharded stream router
+    (parallel/sharded_router.py): one shard of the key stream per device,
+    loads synced by psum over "data" every load-sync epoch."""
+    n_dev = jax.local_device_count()
+    if n_shards > n_dev:
+        raise ValueError(
+            f"n_shards={n_shards} exceeds {n_dev} local device(s); "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=N on CPU"
+        )
+    return jax.make_mesh((n_shards,), ("data",))

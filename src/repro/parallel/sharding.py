@@ -33,7 +33,18 @@ __all__ = [
     "make_sharder",
     "batch_specs",
     "cache_specs",
+    "stream_shard_specs",
 ]
+
+
+def stream_shard_specs(has_ncand: bool = True):
+    """(in_specs, out_specs) for shard_map-ing the sharded stream router
+    (parallel/sharded_router.py) over a ("data",) mesh: the key stream (and
+    its per-message candidate counts, when present) split over "data", the
+    hash-seed family replicated; assignments split, the synced global loads
+    row replicated (it is psum-ed every load-sync epoch)."""
+    ins = (P("data"), P("data"), P()) if has_ncand else (P("data"), P())
+    return ins, (P("data"), P())
 
 
 @dataclasses.dataclass(frozen=True)
