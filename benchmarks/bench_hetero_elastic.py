@@ -1,0 +1,237 @@
+"""Beyond-paper: heterogeneous worker capacities and elastic rescaling.
+
+PKG assumes identical workers; real clusters mix machine generations and
+autoscale.  arXiv 1705.09073 extends the Greedy-d argmin to *capacity-
+normalized* loads (least ``load/c`` wins), which this repo threads end to
+end — LoadLedger, every host partitioner, the Pallas route_block core, and
+the sharded router (see DESIGN.md).  This bench gates that the weighting
+actually pays, and that the serving simulator's autoscaler rescales cleanly:
+
+* ``hetero_cap124`` — a {1x, 2x, 4x} worker pool.  Each partitioner routes
+  the same zipf stream twice, with and without the capacity vector; the
+  metric is the relative capacity-normalized imbalance
+  (core.metrics.capacity_imbalance_fraction — 0 when work is exactly
+  proportional to capacity).  Gates: capacity-weighted W-Choices beats its
+  unweighted self by a wide margin and its fast workers genuinely absorb
+  proportionally more work; weighted PKG is gated *no worse* only — its
+  head key is pinned to a fixed hash-chosen d=2 candidate pair, so when
+  that pair lands on slow workers no amount of load weighting can move it
+  (the exact limitation W-Choices lifts by freeing head keys to route
+  anywhere).  Both W-Choices runs use the capacity-relative balanceability
+  threshold ``theta = d * c_min / sum(c)`` — the heterogeneous analogue of
+  the paper's §5 ``d/n`` limit: a key is only balanceable if its candidate
+  set's worst-case capacity share covers its frequency.  A serving-level
+  twin drives two W-Choices schedulers through the discrete-event simulator
+  on the SAME heterogeneous service rates and bounded queues — one routing
+  on normalized loads, one capacity-blind — and gates mean request latency:
+  the blind router keeps standing queues on the slow replicas (their fair
+  raw-load share exceeds their service rate), the weighted router steers
+  around them.  All "imbalance" entries are under the check_regression
+  gate, direction up.
+* ``elastic_wave`` — a cost wave (2.5x for the middle third of the stream)
+  hits a PoTC pool run by serving.sim.Autoscaler.  Gates: the pool scales
+  up under the wave and back down after, nothing is lost
+  (``completed + shed == m``), and the queue-drain recovery time after the
+  wave is a small fraction of the run (``SimResult.sample_outstanding`` is
+  the drain curve; tests/test_capacity.py pins the per-transition
+  invariants).
+
+`PYTHONPATH=src:. python benchmarks/bench_hetero_elastic.py [--scale S]
+[--quick] [--out PATH]` writes the JSON report via the benchmarks/common.py
+convention; `run(scale)` yields CSV rows for benchmarks/run.py.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Row, bench_main
+from repro.core.metrics import capacity_imbalance_fraction
+from repro.core.partitioners import pkg_partition, w_choices_partition
+from repro.core.streams import zipf_stream
+from repro.serving import Autoscaler, WChoicesScheduler, simulate_serving
+from repro.serving.scheduler import PoTCScheduler
+
+N_HET = 12
+CAPS_124 = np.tile(np.array([1.0, 2.0, 4.0]), N_HET // 3)  # {1x,2x,4x} pool
+
+
+class _CapacityBlindScheduler(WChoicesScheduler):
+    """W-Choices on a heterogeneous cluster that ROUTES capacity-blind.
+
+    The ledger keeps the capacity vector (so serving.sim serves at the true
+    heterogeneous rates and samples capacity-normalized imbalance — the
+    comparison against the weighted scheduler is apples-to-apples), but
+    route() withholds it from the policy: decisions compare raw outstanding
+    work, exactly the pre-capacity router."""
+
+    def route(self, key: int, cost: float = 1.0) -> int:
+        c = self.policy.decide(
+            int(key), self.ledger.loads, self.ledger.live_mask()
+        )
+        self.ledger.acquire(c, cost)
+        return c
+
+
+def _hetero_scenario(m: int, seed: int) -> dict:
+    keys = zipf_stream(m, max(m // 32, 64), 1.4, seed=seed)
+    caps = CAPS_124
+    # heterogeneous balanceability limit: a key pinned to d candidates is
+    # only balanceable if even the slowest candidate pair can cover its
+    # frequency, so the head threshold drops from the paper's d/n to
+    # d * c_min / sum(c) (both W-Choices runs use it — apples-to-apples)
+    theta_het = 2.0 * float(caps.min()) / float(caps.sum())
+    entry: dict = {
+        "n_workers": N_HET, "n_msgs": m, "capacities": caps.tolist(),
+        "theta": theta_het,
+        "imbalance": {}, "us_per_msg": {}, "load_share_4x": {},
+    }
+    parts = {
+        "pkg": lambda k, n, capacities: pkg_partition(
+            k, n, capacities=capacities),
+        "w_choices": lambda k, n, capacities: w_choices_partition(
+            k, n, theta=theta_het, capacities=capacities),
+    }
+    for name, fn in parts.items():
+        for tag, cap_arg in ((f"{name}_weighted", caps),
+                             (f"{name}_unweighted", None)):
+            t0 = time.perf_counter()
+            assign = np.asarray(fn(keys, N_HET, capacities=cap_arg))
+            dt = time.perf_counter() - t0
+            entry["imbalance"][tag] = capacity_imbalance_fraction(assign, caps)
+            counts = np.bincount(assign, minlength=N_HET)
+            entry["load_share_4x"][tag] = float(
+                counts[caps == 4.0].sum() / m
+            )
+            entry["us_per_msg"][tag] = dt / m * 1e6
+
+    # serving twin: same heterogeneous service rates and bounded queues,
+    # weighted vs capacity-blind routing; sample_imbalance is capacity-
+    # normalized in both runs because both ledgers carry the capacity vector
+    for tag, cls in (("serving_weighted", WChoicesScheduler),
+                     ("serving_blind", _CapacityBlindScheduler)):
+        sched = cls(N_HET, seed=seed, theta=theta_het, capacities=caps)
+        t0 = time.perf_counter()
+        res = simulate_serving(sched, keys, utilization=0.9, queue_bound=16)
+        dt = time.perf_counter() - t0
+        entry["imbalance"][tag] = float(res.sample_imbalance.mean())
+        entry["us_per_msg"][tag] = dt / m * 1e6
+        entry.setdefault("mean_latency", {})[tag] = float(
+            np.nanmean(res.latency))
+        entry.setdefault("p99_latency", {})[tag] = res.latency_p99
+        entry.setdefault("drop_rate", {})[tag] = res.shed / m
+        entry.setdefault("lost", {})[tag] = m - res.completed - res.shed
+    return entry
+
+
+def _elastic_scenario(m: int, seed: int) -> dict:
+    n = N_HET
+    keys = zipf_stream(m, max(m // 32, 64), 1.2, seed=seed + 1)
+    costs = np.ones(m)
+    i0, i1 = m // 3, 2 * m // 3
+    costs[i0:i1] = 2.5  # the load wave
+    asc = Autoscaler(
+        min_replicas=4, max_replicas=n, initial=4, high=3.0, low=0.5,
+        check_every=max(m // 100, 1), cooldown=max(m // 40, 1),
+    )
+    sched = PoTCScheduler(n, seed=seed)
+    t0 = time.perf_counter()
+    res = simulate_serving(
+        sched, keys, costs=costs, utilization=0.85, autoscaler=asc,
+    )
+    dt_wall = time.perf_counter() - t0
+
+    ups = [t for t, d, _ in res.scale_events if d == 1]
+    downs = [t for t, d, _ in res.scale_events if d == -1]
+    # recovery: after the wave ends, time until total outstanding work first
+    # returns to <= 2x its pre-wave mean (the queue-drain transient)
+    dt_arr = float(costs.mean()) / (0.85 * asc.initial)
+    t_wave_start, t_wave_end = i0 * dt_arr, i1 * dt_arr
+    ts, out = res.sample_times, res.sample_outstanding
+    pre = out[(ts < t_wave_start)]
+    recovery = float("inf")
+    if len(pre):
+        limit = 2.0 * float(pre.mean())
+        ok = np.flatnonzero((ts >= t_wave_end) & (out <= limit))
+        if len(ok):
+            recovery = float(ts[ok[0]] - t_wave_end)
+    return {
+        "n_workers": n, "n_msgs": m, "initial_replicas": asc.initial,
+        "imbalance": {"potc_elastic": float(np.nanmean(res.sample_imbalance))},
+        "us_per_msg": {"potc_elastic": dt_wall / m * 1e6},
+        "scale_ups": len(ups), "scale_downs": len(downs),
+        "first_scale_up_t": ups[0] if ups else None,
+        "wave": [t_wave_start, t_wave_end],
+        "recovery_time": recovery,
+        "makespan": res.makespan,
+        "requeued": res.requeued,
+        "lost": {"potc_elastic": m - res.completed - res.shed},
+    }
+
+
+def collect(scale: float = 1.0, seed: int = 0) -> dict:
+    """Heterogeneous + elastic sweep; JSON report with acceptance checks."""
+    m = max(int(60_000 * scale), 9_000)
+    het = _hetero_scenario(m, seed)
+    ela = _elastic_scenario(m, seed)
+    imb = het["imbalance"]
+    checks = {
+        # the tentpole payoff: normalizing the argmin by capacity beats the
+        # capacity-blind router on the same {1x,2x,4x} pool; PKG is gated
+        # no-worse only (its head key is pinned to a fixed d=2 pair — see
+        # the module docstring)
+        "weighted_pkg_no_worse":
+            imb["pkg_weighted"] <= 1.05 * imb["pkg_unweighted"],
+        "weighted_w_beats_unweighted":
+            imb["w_choices_weighted"] < 0.5 * imb["w_choices_unweighted"],
+        # the 4x workers hold more work only when the router knows about them
+        "fast_workers_absorb_more":
+            het["load_share_4x"]["w_choices_weighted"]
+            > het["load_share_4x"]["w_choices_unweighted"],
+        # serving twin: requests wait measurably less when the router knows
+        # the replica speeds (blind keeps standing queues on slow replicas)
+        "serving_weighted_beats_blind":
+            het["mean_latency"]["serving_weighted"]
+            < 0.95 * het["mean_latency"]["serving_blind"],
+        "zero_lost_hetero": all(v == 0 for v in het["lost"].values()),
+        # elastic: the wave forces a scale-up, the lull after it a scale-down
+        "scaled_up_under_wave": ela["scale_ups"] >= 1,
+        "scaled_down_after_wave": ela["scale_downs"] >= 1,
+        "zero_lost_elastic": all(v == 0 for v in ela["lost"].values()),
+        # the queue drains back to its pre-wave level within 40% of the run
+        "rescale_recovery_bounded":
+            ela["recovery_time"] <= 0.4 * ela["makespan"],
+    }
+    return {
+        "scenarios": {"hetero_cap124": het, "elastic_wave": ela},
+        "checks": checks,
+    }
+
+
+def run(scale: float = 1.0) -> list[Row]:
+    rows = []
+    report = collect(scale=scale)
+    het = report["scenarios"]["hetero_cap124"]
+    ela = report["scenarios"]["elastic_wave"]
+    for tag, v in het["imbalance"].items():
+        rows.append(
+            Row(f"hetero_elastic/cap124/{tag}", het["us_per_msg"][tag],
+                f"cap_imb={v:.3e}")
+        )
+    rows.append(
+        Row("hetero_elastic/elastic_wave/potc",
+            ela["us_per_msg"]["potc_elastic"],
+            f"ups={ela['scale_ups']} downs={ela['scale_downs']} "
+            f"recovery={ela['recovery_time']:.1f}")
+    )
+    ok = all(report["checks"].values())
+    rows.append(Row("hetero_elastic/checks", 0.0, "pass" if ok else "FAIL"))
+    return rows
+
+
+# CI quick scale, shared with benchmarks/run.py --ci-set.
+QUICK_SCALE = 0.2
+
+if __name__ == "__main__":
+    bench_main("hetero_elastic", collect, quick_scale=QUICK_SCALE)

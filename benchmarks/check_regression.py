@@ -24,14 +24,8 @@ machine-dependent and never gated.  An absolute floor (--floor) keeps
 near-zero values (e.g. W-Choices imbalance at ~1e-5, zero drop rates) from
 tripping the ratio on sampling noise.
 
-Regenerate the baseline after an intentional change (the CI quick-bench
-list itself lives in benchmarks/run.py CI_SET; the XLA flag matches ci.yml
-so the sharded-router bench runs on real host devices, not emulation):
-
-    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-        PYTHONPATH=src:. python benchmarks/run.py --quick --ci-set --out /tmp/bench-out
-    python benchmarks/check_regression.py --merge /tmp/bench-out/BENCH_*.json \
-        --out benchmarks/baselines/BENCH_baseline.json
+docs/benchmarks.md is the full reference: the BENCH_* report convention,
+the gated-metric table, and the exact baseline-regeneration commands.
 """
 from __future__ import annotations
 

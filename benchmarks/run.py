@@ -28,6 +28,7 @@ from benchmarks import (
     bench_drift,
     bench_failover_serving,
     bench_heavy_hitters,
+    bench_hetero_elastic,
     bench_fig4,
     bench_fig5,
     bench_fig6,
@@ -65,6 +66,7 @@ MODULES = [
     ("drift", bench_drift),
     ("serving", bench_serving),
     ("failover_serving", bench_failover_serving),
+    ("hetero_elastic", bench_hetero_elastic),
     ("sharded_router", bench_sharded_router),
 ]
 
@@ -78,6 +80,7 @@ CI_SET = [
     ("moe_balance", bench_moe_balance),
     ("moe_train", bench_moe_train),
     ("failover_serving", bench_failover_serving),
+    ("hetero_elastic", bench_hetero_elastic),
     ("sharded_router", bench_sharded_router),
 ]
 

@@ -10,6 +10,11 @@ hit-rate, and per-tenant SLO accounting counts violations.  W-Choices is the
 default: cold sessions keep PoTC's <= 2-replica affinity, hot sessions trade
 affinity for balance.
 
+--queue-bound and --kill-at exercise the overload/failure surfaces;
+--capacities gives replicas heterogeneous speeds (pattern tiled across the
+pool — routing normalizes loads by capacity, the simulator serves at the
+true rates; see docs/operator-guide.md).
+
 REPRO_SMOKE=1 shrinks generation length and stream for CI's examples-smoke.
 """
 import argparse
@@ -34,6 +39,9 @@ ap.add_argument("--queue-bound", type=int, default=None,
 ap.add_argument("--kill-at", type=float, default=None, metavar="FRAC",
                 help="kill replica 0 after this fraction of the stream; its "
                      "pending work drains to the live replicas")
+ap.add_argument("--capacities", default=None, metavar="C1,C2,...",
+                help="per-replica speed pattern tiled across the pool "
+                     "(e.g. '1,2,4'); routing goes capacity-normalized")
 args = ap.parse_args()
 
 SMOKE = os.environ.get("REPRO_SMOKE") == "1"
@@ -59,16 +67,22 @@ keys, tenants = multi_tenant_stream(
 kill_schedule = None
 if args.kill_at is not None:
     kill_schedule = [(args.kill_at * m / (0.7 * n_replicas), 0)]
+capacities = None
+if args.capacities is not None:
+    pat = np.asarray([float(c) for c in args.capacities.split(",")])
+    capacities = np.resize(pat, n_replicas)
 print(
     f"\nrequest routing: {m} requests, {n_replicas} replicas, "
     f"{n_tenants} tenants, Zipf(1.6) sessions, SLO 0.1"
     + (f", queue-bound {args.queue_bound}" if args.queue_bound else "")
     + (f", kill replica 0 @ {args.kill_at:.0%}" if kill_schedule else "")
+    + (f", capacities {args.capacities} tiled" if capacities is not None else "")
 )
 print(f"{'scheduler':>12s}  cache-hit  outstanding-imb  routed-imb  "
       "p99-lat   shed  SLO-viol  fanout")
 for name in SCHEDULERS:
-    sched = PolicyScheduler(make_policy(name, n_replicas, d=2, seed=0))
+    sched = PolicyScheduler(make_policy(name, n_replicas, d=2, seed=0),
+                            capacities=capacities)
     res = simulate_serving(
         sched, keys, tenants=tenants, utilization=0.7,
         cache_capacity=32, slo=0.1,

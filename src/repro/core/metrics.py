@@ -18,6 +18,7 @@ __all__ = [
     "imbalance_series",
     "avg_imbalance_fraction",
     "final_imbalance_fraction",
+    "capacity_imbalance_fraction",
     "keys_per_worker",
     "disagreement",
     "tenant_imbalance_report",
@@ -74,6 +75,23 @@ def avg_imbalance_fraction(
 def final_imbalance_fraction(assign: np.ndarray, n_workers: int) -> float:
     """I(m) / m."""
     return imbalance(loads_from_assignment(assign, n_workers)) / len(assign)
+
+
+def capacity_imbalance_fraction(
+    assign: np.ndarray, capacities: np.ndarray,
+    weights: np.ndarray | None = None,
+) -> float:
+    """Relative capacity-normalized imbalance of the final assignment
+    (arXiv 1705.09073): ``(max_i l_i/c_i - L/C) / (L/C)`` with
+    ``L = sum(l)``, ``C = sum(c)`` — 0 when every worker holds work exactly
+    proportional to its capacity, and identical to the unweighted relative
+    imbalance ``(max - mean)/mean`` at uniform capacities."""
+    cap = np.asarray(capacities, dtype=np.float64)
+    loads = loads_from_assignment(assign, len(cap), weights=weights)
+    avg = loads.sum() / cap.sum()
+    if avg == 0:
+        return 0.0
+    return float(((loads / cap).max() - avg) / avg)
 
 
 def keys_per_worker(keys: np.ndarray, assign: np.ndarray, n_workers: int) -> np.ndarray:

@@ -88,14 +88,50 @@ def shuffle_partition(keys: jnp.ndarray, n_workers: int, offset: int = 0) -> jnp
     return ((jnp.arange(m, dtype=jnp.int32) + offset) % n_workers).astype(jnp.int32)
 
 
-def _greedy_scan(cand: jnp.ndarray, n_workers: int, weights: Optional[jnp.ndarray]):
-    """Sequential Greedy-d over candidate sets cand (m, d)."""
+def _host_inv_cap(capacities, n_workers: int):
+    """Validated (n_workers,) f32 reciprocal-capacity vector, or None.
+
+    The host partitioners' capacity normalization (arXiv 1705.09073): every
+    load comparison becomes ``load * (1/c)`` in f32 — the SAME product the
+    kernels form, so host/kernel differentials stay bit-exact (loads are
+    integer counts < 2^24).  Strictly positive capacities required here;
+    zero-capacity workers are a routing-policy concept, folded into the
+    alive mask at the LoadLedger layer, not a partitioner one.
+    """
+    if capacities is None:
+        return None
+    cap = np.asarray(capacities, dtype=np.float32).reshape(-1)
+    if cap.shape != (n_workers,):
+        raise ValueError(f"capacities shape {cap.shape} != ({n_workers},)")
+    if not (cap > 0).all():
+        raise ValueError("partitioner capacities must be strictly positive")
+    return jnp.asarray(1.0 / cap)
+
+
+def _trace_inv_cap(capacities, n_workers: int):
+    """The in-jit twin of _host_inv_cap (no host-side validation — the
+    argument may be a tracer).  Division by a non-positive capacity yields
+    inf/nan comparisons; jitted callers document the > 0 requirement."""
+    if capacities is None:
+        return None
+    return 1.0 / jnp.asarray(capacities, jnp.float32).reshape(n_workers)
+
+
+def _greedy_scan(cand: jnp.ndarray, n_workers: int,
+                 weights: Optional[jnp.ndarray], inv_cap=None):
+    """Sequential Greedy-d over candidate sets cand (m, d).
+
+    inv_cap (n_workers,) f32 switches the argmin to capacity-normalized
+    loads (loads stay integer counts; only the comparison rescales).
+    """
     m = cand.shape[0]
     w = jnp.ones((m,), jnp.int32) if weights is None else weights.astype(jnp.int32)
 
     def step(loads, inp):
         c, wt = inp
         lc = loads[c]  # (d,) current candidate loads
+        if inv_cap is not None:
+            lc = lc.astype(jnp.float32) * inv_cap[c]
         choice = c[jnp.argmin(lc)]
         return loads.at[choice].add(wt), choice
 
@@ -111,15 +147,20 @@ def pkg_partition(
     d: int = 2,
     seed: int = 0,
     weights: Optional[jnp.ndarray] = None,
+    capacities: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """PARTIAL KEY GROUPING: Greedy-d with key splitting (paper SS3).
 
     Every message is routed to the least-loaded of its d hash candidates,
     using the loads generated by *this* stream (local estimation when the
-    stream is one source's sub-stream).
+    stream is one source's sub-stream).  `capacities` (optional strictly
+    positive (n_workers,) weights) makes the argmin capacity-normalized:
+    least ``load/c`` wins; None is the unweighted path, bit-identical to
+    before, and uniform capacities reproduce it exactly.
     """
     cand = hash_choices(keys, n_workers, d=d, seed=seed)
-    return _greedy_scan(cand, n_workers, weights)
+    return _greedy_scan(cand, n_workers, weights,
+                        inv_cap=_trace_inv_cap(capacities, n_workers))
 
 
 @functools.partial(jax.jit, static_argnames=("n_workers", "d", "seed", "block"))
@@ -129,6 +170,7 @@ def pkg_partition_batched(
     d: int = 2,
     seed: int = 0,
     block: int = 128,
+    capacities: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """TPU-native PKG: vector-block greedy with intra-block-stale loads.
 
@@ -137,9 +179,11 @@ def pkg_partition_batched(
     updated with the block's choice histogram (one-hot matmul -> MXU).
     Equivalent to local load estimation with ceil(m/block) micro-sources
     (DESIGN.md SS2); fidelity vs the sequential scan is quantified in
-    benchmarks/bench_batched_fidelity.py.
+    benchmarks/bench_batched_fidelity.py.  `capacities` (> 0) switches the
+    lane argmin to capacity-normalized loads.
     """
     m = keys.shape[0]
+    inv_cap = _trace_inv_cap(capacities, n_workers)
     nblk = -(-m // block)
     pad = nblk * block - m
     keys_p = jnp.pad(keys, (0, pad))
@@ -151,6 +195,8 @@ def pkg_partition_batched(
     def step(loads, inp):
         c, v = inp  # (block, d), (block,)
         lc = loads[c]  # (block, d)
+        if inv_cap is not None:
+            lc = lc.astype(jnp.float32) * inv_cap[c]
         sel = jnp.argmin(lc, axis=-1)  # (block,)
         choice = jnp.take_along_axis(c, sel[:, None], axis=-1)[:, 0]
         onehot = (jax.nn.one_hot(choice, n_workers, dtype=jnp.int32) * v[:, None])
@@ -163,21 +209,26 @@ def pkg_partition_batched(
 
 @functools.partial(jax.jit, static_argnames=("n_workers", "n_keys", "d", "seed"))
 def potc_static_partition(
-    keys: jnp.ndarray, n_workers: int, n_keys: int, d: int = 2, seed: int = 0
+    keys: jnp.ndarray, n_workers: int, n_keys: int, d: int = 2, seed: int = 0,
+    capacities: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Static PoTC *without* key splitting (paper SS3.1): the first placement of
     each key is remembered in a routing table and reused for every repeat.
 
     Needs O(n_keys) state -- the very cost PKG exists to remove; simulated here
-    as a baseline.  Keys must be in [0, n_keys).
+    as a baseline.  Keys must be in [0, n_keys).  `capacities` (> 0) makes the
+    first-placement argmin capacity-normalized.
     """
     cand = hash_choices(keys, n_workers, d=d, seed=seed)
+    inv_cap = _trace_inv_cap(capacities, n_workers)
 
     def step(state, c):
         loads, table = state
         k, cd = c
         prev = table[k]
         lc = loads[cd]
+        if inv_cap is not None:
+            lc = lc.astype(jnp.float32) * inv_cap[cd]
         fresh = cd[jnp.argmin(lc)]
         choice = jnp.where(prev >= 0, prev, fresh)
         return (loads.at[choice].add(1), table.at[k].set(choice)), choice
@@ -190,15 +241,19 @@ def potc_static_partition(
 
 @functools.partial(jax.jit, static_argnames=("n_workers", "n_keys"))
 def on_greedy_partition(
-    keys: jnp.ndarray, n_workers: int, n_keys: int
+    keys: jnp.ndarray, n_workers: int, n_keys: int,
+    capacities: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """On-Greedy (paper SS6.2): a new key goes to the globally least-loaded
-    worker; the choice is remembered.  Requires global load + routing table."""
+    worker; the choice is remembered.  Requires global load + routing table.
+    `capacities` (> 0) makes the global argmin capacity-normalized."""
+    inv_cap = _trace_inv_cap(capacities, n_workers)
 
     def step(state, k):
         loads, table = state
         prev = table[k]
-        fresh = jnp.argmin(loads).astype(jnp.int32)
+        nl = loads if inv_cap is None else loads.astype(jnp.float32) * inv_cap
+        fresh = jnp.argmin(nl).astype(jnp.int32)
         choice = jnp.where(prev >= 0, prev, fresh)
         return (loads.at[choice].add(1), table.at[k].set(choice)), choice
 
@@ -210,17 +265,21 @@ def on_greedy_partition(
 
 @functools.partial(jax.jit, static_argnames=("n_workers", "n_keys"))
 def off_greedy_partition(
-    keys: jnp.ndarray, n_workers: int, n_keys: int
+    keys: jnp.ndarray, n_workers: int, n_keys: int,
+    capacities: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Off-Greedy (paper SS6.2): offline LPT -- sort keys by total frequency,
     assign each key's whole mass to the least-loaded worker.  Unfair upper
-    baseline: it sees the full key distribution in advance."""
+    baseline: it sees the full key distribution in advance.  `capacities`
+    (> 0) runs LPT on capacity-normalized loads."""
     counts = jnp.zeros((n_keys,), jnp.int32).at[keys].add(1)
     order = jnp.argsort(-counts)  # keys by decreasing frequency
+    inv_cap = _trace_inv_cap(capacities, n_workers)
 
     def step(state, k):
         loads, key2w = state
-        choice = jnp.argmin(loads).astype(jnp.int32)
+        nl = loads if inv_cap is None else loads.astype(jnp.float32) * inv_cap
+        choice = jnp.argmin(nl).astype(jnp.int32)
         return (loads.at[choice].add(counts[k]), key2w.at[k].set(choice)), None
 
     loads0 = jnp.zeros((n_workers,), jnp.int32)
@@ -231,13 +290,14 @@ def off_greedy_partition(
 
 @functools.partial(jax.jit, static_argnames=("n_workers",))
 def _masked_greedy_scan(
-    cand: jnp.ndarray, n_cand: jnp.ndarray, n_workers: int
+    cand: jnp.ndarray, n_cand: jnp.ndarray, n_workers: int, inv_cap=None
 ) -> jnp.ndarray:
     """Greedy over a variable per-message prefix of cand (m, d_max).
 
     Candidate j of message i participates iff j < n_cand[i]; the rest are
     masked to INT32_MAX so argmin (first-index tie-break) matches pkg's
-    behaviour exactly whenever n_cand[i] == d.
+    behaviour exactly whenever n_cand[i] == d.  With inv_cap the comparison
+    runs in f32 on normalized loads, masked with the kernels' f32 sentinel.
     """
     d_max = cand.shape[1]
     col = jnp.arange(d_max, dtype=jnp.int32)
@@ -245,7 +305,13 @@ def _masked_greedy_scan(
 
     def step(loads, inp):
         c, nc = inp
-        lc = jnp.where(col < nc, loads[c], sentinel)
+        if inv_cap is None:
+            lc = jnp.where(col < nc, loads[c], sentinel)
+        else:
+            lc = jnp.where(
+                col < nc, loads[c].astype(jnp.float32) * inv_cap[c],
+                jnp.float32(1e30),
+            )
         choice = c[jnp.argmin(lc)]
         return loads.at[choice].add(1), choice
 
@@ -256,14 +322,16 @@ def _masked_greedy_scan(
 
 @functools.partial(jax.jit, static_argnames=("n_workers",))
 def _any_worker_greedy_scan(
-    cand: jnp.ndarray, is_head: jnp.ndarray, n_workers: int
+    cand: jnp.ndarray, is_head: jnp.ndarray, n_workers: int, inv_cap=None
 ) -> jnp.ndarray:
-    """Greedy-d for tail messages; global least-loaded for head messages."""
+    """Greedy-d for tail messages; global least-loaded for head messages.
+    inv_cap switches both argmins to capacity-normalized loads."""
 
     def step(loads, inp):
         c, h = inp
-        tail_choice = c[jnp.argmin(loads[c])]
-        head_choice = jnp.argmin(loads).astype(jnp.int32)
+        nl = loads if inv_cap is None else loads.astype(jnp.float32) * inv_cap
+        tail_choice = c[jnp.argmin(nl[c])]
+        head_choice = jnp.argmin(nl).astype(jnp.int32)
         choice = jnp.where(h, head_choice, tail_choice)
         return loads.at[choice].add(1), choice
 
@@ -342,6 +410,7 @@ def d_choices_partition(
     capacity: int = 1024,
     slack: float = 2.0,
     min_count: int = 8,
+    capacities=None,
 ) -> jnp.ndarray:
     """D-CHOICES (arXiv 1510.05714): skew-adaptive number of choices.
 
@@ -351,7 +420,8 @@ def d_choices_partition(
     keep PKG's exact d choices.  Frequencies come from a SPACESAVING pass
     over the stream (O(capacity) state; DESIGN.md SS3.3).  The head test and
     the integer-exact d(k) rule are shared with the online variant, which is
-    what makes the frozen-carry differential bit-exact.
+    what makes the frozen-carry differential bit-exact.  `capacities` (> 0)
+    normalizes the masked argmin by 1/c.
     """
     keys_np = np.asarray(keys, dtype=np.int32)
     d_max = max(int(min(d_max, n_workers)), d)
@@ -359,7 +429,8 @@ def d_choices_partition(
         keys_np, n_workers, d, d_max, theta, capacity, slack, min_count
     )
     cand = hash_choices(jnp.asarray(keys_np), n_workers, d=d_max, seed=seed)
-    return _masked_greedy_scan(cand, jnp.asarray(n_cand), n_workers)
+    return _masked_greedy_scan(cand, jnp.asarray(n_cand), n_workers,
+                               inv_cap=_host_inv_cap(capacities, n_workers))
 
 
 def d_choices_kernel_partition(
@@ -375,6 +446,7 @@ def d_choices_kernel_partition(
     chunk: Optional[int] = None,
     block: int = 128,
     interpret: Optional[bool] = None,
+    capacities=None,
 ) -> jnp.ndarray:
     """D-CHOICES on the Pallas masked-prefix router.
 
@@ -383,12 +455,14 @@ def d_choices_kernel_partition(
     data-dependent candidate counts.  Chunk/pad convention matches
     w_choices_kernel_partition: one chunk of vector blocks by default,
     padding appended as tail messages (n_cand = d), block=1 reproduces
-    d_choices_partition bit-exactly.
+    d_choices_partition bit-exactly — including under `capacities` (> 0),
+    which the kernel consumes as a reciprocal-capacity row.
     """
     from repro.kernels.adaptive_route import adaptive_route  # kernels on core
 
     keys_np = np.asarray(keys, dtype=np.int32)
     d_max = max(int(min(d_max, n_workers)), d)
+    _host_inv_cap(capacities, n_workers)  # validate shape/positivity
     n_cand = _adaptive_n_cand(
         keys_np, n_workers, d, d_max, theta, capacity, slack, min_count
     )
@@ -401,6 +475,9 @@ def d_choices_kernel_partition(
         jnp.asarray(np.pad(n_cand, (0, pad), constant_values=d)),
         n_workers, d_max=d_max, seed=seed, chunk=chunk, block=block,
         interpret=interpret,
+        capacities=None if capacities is None else jnp.asarray(
+            np.asarray(capacities, np.float32)
+        ),
     )
     return assign[:m]
 
@@ -413,6 +490,7 @@ def w_choices_partition(
     theta: Optional[float] = None,
     capacity: int = 1024,
     min_count: int = 8,
+    capacities=None,
 ) -> jnp.ndarray:
     """W-CHOICES (arXiv 1510.05714): head keys may go to ANY worker.
 
@@ -420,14 +498,17 @@ def w_choices_partition(
     keys (canonical head_test, as in d_choices_partition) go to the globally
     least-loaded worker, which restores near-perfect balance however extreme
     the skew (at the cost of up to W-way key splitting for the few head
-    keys; DESIGN.md SS3.3).
+    keys; DESIGN.md SS3.3).  `capacities` (> 0) normalizes both the tail and
+    the global argmin by 1/c — the heterogeneous-cluster variant (arXiv
+    1705.09073): a 4x worker soaks up 4x the head traffic.
     """
     keys_np = np.asarray(keys, dtype=np.int32)
     is_head = _head_flags(
         keys_np, n_workers, d, theta, capacity, min_count
     ).astype(bool)
     cand = hash_choices(jnp.asarray(keys_np), n_workers, d=d, seed=seed)
-    return _any_worker_greedy_scan(cand, jnp.asarray(is_head), n_workers)
+    return _any_worker_greedy_scan(cand, jnp.asarray(is_head), n_workers,
+                                   inv_cap=_host_inv_cap(capacities, n_workers))
 
 
 def w_choices_kernel_partition(
@@ -441,6 +522,7 @@ def w_choices_kernel_partition(
     chunk: Optional[int] = None,
     block: int = 128,
     interpret: Optional[bool] = None,
+    capacities=None,
 ) -> jnp.ndarray:
     """W-CHOICES on the Pallas router: the in-kernel global-argmin path.
 
@@ -450,13 +532,15 @@ def w_choices_kernel_partition(
     the kernel's masked lane reduction, tail keys keep PKG's exact d-candidate
     step.  Defaults to one chunk (a single local estimator) with vector blocks
     of `block` keys, so loads are stale by < block messages (DESIGN.md SS2);
-    block=1 reproduces w_choices_partition bit-exactly.  The stream is padded
-    to the chunk grid with tail messages; padding is appended, so real
-    assignments are unaffected.
+    block=1 reproduces w_choices_partition bit-exactly — including under
+    `capacities` (> 0), which weights the tail argmin and the head water-fill
+    by 1/c.  The stream is padded to the chunk grid with tail messages;
+    padding is appended, so real assignments are unaffected.
     """
     from repro.kernels.adaptive_route import w_route  # kernels layer on core
 
     keys_np = np.asarray(keys, dtype=np.int32)
+    _host_inv_cap(capacities, n_workers)  # validate shape/positivity
     is_head = _head_flags(keys_np, n_workers, d, theta, capacity, min_count)
     m = len(keys_np)
     if chunk is None:
@@ -467,6 +551,9 @@ def w_choices_kernel_partition(
         jnp.asarray(np.pad(is_head, (0, pad))),
         n_workers, d=d, seed=seed, chunk=chunk, block=block,
         interpret=interpret,
+        capacities=None if capacities is None else jnp.asarray(
+            np.asarray(capacities, np.float32)
+        ),
     )
     return assign[:m]
 
@@ -490,6 +577,7 @@ def _online_adaptive_scan(
     decay_period: int,
     any_worker: bool,
     update_tracker: bool,
+    inv_cap=None,
 ) -> jnp.ndarray:
     """Single fused scan: SPACESAVING carry + head test + greedy routing.
 
@@ -497,7 +585,9 @@ def _online_adaptive_scan(
     router accounts for the message it is about to route), head verdict from
     the updated summary, then the same greedy step as the offline variants —
     masked d(k)-prefix argmin (D mode) or global argmin for head keys (W
-    mode).  Tail verdicts reproduce PKG's step bit-exactly.
+    mode).  Tail verdicts reproduce PKG's step bit-exactly.  inv_cap
+    (n_workers,) f32 switches every argmin to capacity-normalized loads,
+    with the kernels' f32 1e30 sentinel masking dead candidate lanes.
     """
     m, d_max = cand.shape
     col = jnp.arange(d_max, dtype=jnp.int32)
@@ -517,15 +607,24 @@ def _online_adaptive_scan(
         cnt = online_ss_estimate(state, k)
         is_head = head_test(cnt, state.total, theta, min_count)
         if any_worker:
-            tail_choice = c[jnp.argmin(loads[c])]
-            head_choice = jnp.argmin(loads).astype(jnp.int32)
+            nl = loads if inv_cap is None else (
+                loads.astype(jnp.float32) * inv_cap
+            )
+            tail_choice = c[jnp.argmin(nl[c])]
+            head_choice = jnp.argmin(nl).astype(jnp.int32)
             choice = jnp.where(is_head, head_choice, tail_choice)
         else:
             dk = adaptive_d_counts(
                 cnt, state.total, n_workers, d_base=d, d_max=d_max, slack=slack
             )
             nc = jnp.where(is_head, dk, d)
-            lc = jnp.where(col < nc, loads[c], sentinel)
+            if inv_cap is None:
+                lc = jnp.where(col < nc, loads[c], sentinel)
+            else:
+                lc = jnp.where(
+                    col < nc, loads[c].astype(jnp.float32) * inv_cap[c],
+                    jnp.float32(1e30),
+                )
             choice = c[jnp.argmin(lc)]
         return (loads.at[choice].add(1), state), choice
 
@@ -547,6 +646,7 @@ def online_d_choices_partition(
     decay_period: int = 0,
     init_state: Optional[OnlineSS] = None,
     update_tracker: bool = True,
+    capacities=None,
 ) -> jnp.ndarray:
     """Fully-online D-CHOICES: no pre-pass, head state lives in the scan carry.
 
@@ -557,6 +657,7 @@ def online_d_choices_partition(
     starts the tracker (e.g. online_ss_from_tracker) and `update_tracker=False`
     freezes it, which reproduces the offline pre-pass variant bit-exactly
     (the differential contract in test_partitioner_invariants.py).
+    `capacities` (> 0) normalizes the masked argmin by 1/c.
     """
     keys = jnp.asarray(keys, jnp.int32)
     d_max = max(int(min(d_max, n_workers)), d)
@@ -567,6 +668,7 @@ def online_d_choices_partition(
         cand, keys, state0, n_workers=n_workers, d=d, theta=theta, slack=slack,
         min_count=min_count, decay_period=decay_period, any_worker=False,
         update_tracker=update_tracker,
+        inv_cap=_host_inv_cap(capacities, n_workers),
     )
 
 
@@ -581,12 +683,14 @@ def online_w_choices_partition(
     decay_period: int = 0,
     init_state: Optional[OnlineSS] = None,
     update_tracker: bool = True,
+    capacities=None,
 ) -> jnp.ndarray:
     """Fully-online W-CHOICES: head keys go anywhere, detected in-scan.
 
     Tail messages take PKG's exact step; a message whose key currently clears
     theta in the carried summary goes to the globally least-loaded worker.
-    See online_d_choices_partition for the tracker knobs.
+    See online_d_choices_partition for the tracker knobs.  `capacities` (> 0)
+    normalizes both argmins by 1/c.
     """
     keys = jnp.asarray(keys, jnp.int32)
     theta = head_threshold(n_workers, d) if theta is None else float(theta)
@@ -596,6 +700,7 @@ def online_w_choices_partition(
         cand, keys, state0, n_workers=n_workers, d=d, theta=theta, slack=2.0,
         min_count=min_count, decay_period=decay_period, any_worker=True,
         update_tracker=update_tracker,
+        inv_cap=_host_inv_cap(capacities, n_workers),
     )
 
 
@@ -623,6 +728,8 @@ def _sharded_dispatch(
     w_mode: bool,
     mesh,
     emulate: Optional[bool],
+    capacities=None,
+    shard_weights=None,
 ) -> jnp.ndarray:
     """Shared pad/route/trim plumbing for the *_sharded partitioners.
 
@@ -634,6 +741,12 @@ def _sharded_dispatch(
     shard_map program when the host has n_shards devices and the bit-exact
     single-device oracle (ref_sharded_route) otherwise, so the registered
     partitioners run anywhere.
+
+    ``capacities`` (strictly positive (n_workers,)) makes every shard's
+    argmin capacity-normalized; ``shard_weights`` (non-negative (n_shards,))
+    scales each shard's load-sync psum delta — the per-shard capacity
+    weighting of DESIGN.md §6.1's epoch sync.  Both default to the exact
+    unweighted program.
     """
     from repro.parallel.sharded_router import (  # parallel layers on core
         ref_sharded_route,
@@ -661,6 +774,21 @@ def _sharded_dispatch(
             nc_p[s * g:s * g + cnt] = n_cand_np[lo:hi]
         idx[pos:pos + cnt] = np.arange(s * g, s * g + cnt)
         pos += cnt
+    _host_inv_cap(capacities, n_workers)  # validate shape/positivity
+    cap = (
+        None if capacities is None
+        else jnp.asarray(np.asarray(capacities, np.float32))
+    )
+    sw = None
+    if shard_weights is not None:
+        sw_np = np.asarray(shard_weights, np.float32).reshape(-1)
+        if sw_np.shape != (n_shards,):
+            raise ValueError(
+                f"shard_weights shape {sw_np.shape} != ({n_shards},)"
+            )
+        if not (np.isfinite(sw_np).all() and (sw_np >= 0).all()):
+            raise ValueError("shard_weights must be finite and non-negative")
+        sw = jnp.asarray(sw_np)
     if emulate is None:
         emulate = n_shards > jax.local_device_count()
     route = ref_sharded_route if emulate else sharded_route
@@ -669,7 +797,8 @@ def _sharded_dispatch(
         jnp.asarray(keys_p),
         None if nc_p is None else jnp.asarray(nc_p),
         n_workers, d_max=d_max, seed=seed, n_shards=n_shards,
-        sync_period=sync_period, block=block, w_mode=w_mode, **kw,
+        sync_period=sync_period, block=block, w_mode=w_mode,
+        capacities=cap, shard_weights=sw, **kw,
     )
     return jnp.asarray(np.asarray(assign)[idx])
 
@@ -684,13 +813,15 @@ def pkg_sharded_partition(
     block: int = 128,
     mesh=None,
     emulate: Optional[bool] = None,
+    capacities=None,
+    shard_weights=None,
 ) -> jnp.ndarray:
     """PKG on the multi-device sharded router (fixed d candidates)."""
     keys_np = np.asarray(keys, dtype=np.int32)
     return _sharded_dispatch(
         keys_np, None, d, n_workers, d_max=d, seed=seed, n_shards=n_shards,
         sync_period=sync_period, block=block, w_mode=False, mesh=mesh,
-        emulate=emulate,
+        emulate=emulate, capacities=capacities, shard_weights=shard_weights,
     )
 
 
@@ -709,6 +840,8 @@ def d_choices_sharded_partition(
     block: int = 128,
     mesh=None,
     emulate: Optional[bool] = None,
+    capacities=None,
+    shard_weights=None,
 ) -> jnp.ndarray:
     """D-Choices on the sharded router: same offline SPACESAVING pre-pass and
     d(k) schedule as d_choices_kernel_partition (shared _adaptive_n_cand)."""
@@ -720,7 +853,8 @@ def d_choices_sharded_partition(
     return _sharded_dispatch(
         keys_np, n_cand, d, n_workers, d_max=d_max, seed=seed,
         n_shards=n_shards, sync_period=sync_period, block=block,
-        w_mode=False, mesh=mesh, emulate=emulate,
+        w_mode=False, mesh=mesh, emulate=emulate, capacities=capacities,
+        shard_weights=shard_weights,
     )
 
 
@@ -737,6 +871,8 @@ def w_choices_sharded_partition(
     block: int = 128,
     mesh=None,
     emulate: Optional[bool] = None,
+    capacities=None,
+    shard_weights=None,
 ) -> jnp.ndarray:
     """W-Choices on the sharded router: same offline head set as
     w_choices_kernel_partition (shared _head_flags); head keys take the
@@ -751,7 +887,7 @@ def w_choices_sharded_partition(
     return _sharded_dispatch(
         keys_np, n_cand, d, n_workers, d_max=d, seed=seed, n_shards=n_shards,
         sync_period=sync_period, block=block, w_mode=True, mesh=mesh,
-        emulate=emulate,
+        emulate=emulate, capacities=capacities, shard_weights=shard_weights,
     )
 
 

@@ -48,6 +48,45 @@ def _hash_key_np(key: int, seeds: np.ndarray, n_workers: int) -> np.ndarray:
         h = splitmix32_np(np.uint32(int(key) & 0xFFFFFFFF) ^ seeds)
         return (h % np.uint32(n_workers)).astype(np.int32)
 
+def _cap_alive(alive: Optional[np.ndarray],
+               capacities: Optional[np.ndarray]) -> Optional[np.ndarray]:
+    """Fold zero-capacity workers into the alive mask: a worker with c_i == 0
+    can absorb no work, so every policy treats it exactly like a dead replica
+    (same rehash-chain / skip / live-argmin failover paths)."""
+    if capacities is None:
+        return alive
+    pos = capacities > 0
+    if pos.all():
+        return alive
+    return pos if alive is None else (alive & pos)
+
+
+def _cap_loads(loads: np.ndarray,
+               capacities: Optional[np.ndarray]) -> np.ndarray:
+    """Capacity-normalized loads ``load_i / c_i`` (inf where c_i == 0, so a
+    zero-capacity worker never wins an argmin).  ``capacities=None`` returns
+    ``loads`` unchanged — the pre-capacity fast path, bit-identical."""
+    if capacities is None:
+        return loads
+    out = np.full(len(loads), np.inf, dtype=np.float64)
+    np.divide(loads, capacities, out=out, where=capacities > 0)
+    return out
+
+
+def _check_capacities(n: int, capacities) -> Optional[np.ndarray]:
+    """Validate and canonicalize a capacities vector (None passes through)."""
+    if capacities is None:
+        return None
+    cap = np.asarray(capacities, dtype=np.float64).reshape(-1)
+    if cap.shape != (n,):
+        raise ValueError(f"capacities shape {cap.shape} != ({n},)")
+    if not np.isfinite(cap).all() or (cap < 0).any():
+        raise ValueError("capacities must be finite and >= 0")
+    if not (cap > 0).any():
+        raise ValueError("at least one capacity must be positive")
+    return cap
+
+
 __all__ = [
     "LoadLedger",
     "RoutingPolicy",
@@ -85,17 +124,28 @@ class LoadLedger:
       dead replica's keys are drained and redistributed (DESIGN.md §8).
       ``imbalance()`` is computed over live replicas only: a dead replica's
       zero load is capacity removed from the cluster, not spare headroom.
+    * **per-worker capacities** (arXiv 1705.09073) — an optional weights
+      vector ``c``; imbalance and every load comparison downstream work on
+      the capacity-normalized loads ``load_i / c_i``, so a 4x-speed worker
+      legitimately carries 4x the outstanding work.  ``capacities=None``
+      keeps the uniform-cluster code path bit-identical to before; a
+      zero-capacity worker is folded into the live mask (it behaves exactly
+      like a dead replica).
     """
 
-    __slots__ = ("loads", "alive", "strict", "_n_dead")
+    __slots__ = ("loads", "alive", "strict", "capacities", "_n_dead", "_cap_mask")
 
     _EPS = 1e-6  # float accumulation tolerance for strict over-release
 
-    def __init__(self, n_replicas: int, strict: bool = False):
+    def __init__(self, n_replicas: int, strict: bool = False, capacities=None):
         self.loads = np.zeros(n_replicas, dtype=np.float64)
         self.alive = np.ones(n_replicas, dtype=bool)
         self.strict = strict
         self._n_dead = 0
+        self.capacities = None
+        self._cap_mask = None
+        if capacities is not None:
+            self.set_capacities(capacities)
 
     @property
     def n(self) -> int:
@@ -105,10 +155,27 @@ class LoadLedger:
     def any_dead(self) -> bool:
         return self._n_dead > 0
 
+    def set_capacities(self, capacities) -> None:
+        """Install (or clear, with None) the per-worker capacity vector."""
+        cap = _check_capacities(self.n, capacities)
+        self.capacities = cap
+        if cap is None or (cap > 0).all():
+            self._cap_mask = None
+        else:
+            self._cap_mask = cap > 0
+
+    def normalized_loads(self) -> np.ndarray:
+        """``load_i / c_i`` (inf at zero capacity); ``loads`` itself when no
+        capacities are set."""
+        return _cap_loads(self.loads, self.capacities)
+
     def live_mask(self) -> Optional[np.ndarray]:
         """The alive vector when any replica is dead, else None — the exact
         argument ``RoutingPolicy.decide`` takes (None keeps the all-alive
-        fast path bit-identical to the pre-failover code)."""
+        fast path bit-identical to the pre-failover code).  Zero-capacity
+        workers are merged in as dead."""
+        if self._cap_mask is not None:
+            return (self.alive & self._cap_mask) if self._n_dead else self._cap_mask
         return self.alive if self._n_dead else None
 
     def kill(self, replica: int) -> None:
@@ -140,13 +207,28 @@ class LoadLedger:
         self.loads[replica] = max(0.0, rem)
 
     def imbalance(self) -> float:
-        """I(t) = max - avg of the current outstanding work (live replicas)."""
-        live = self.loads[self.alive] if self._n_dead else self.loads
-        return float(live.max() - live.mean())
+        """I(t) = max - avg of the current outstanding work (live replicas).
+
+        With capacities set, both terms are capacity-normalized:
+        ``max_i load_i/c_i - sum(loads)/sum(c)`` over live, positive-capacity
+        replicas — the heterogeneous-cluster objective of arXiv 1705.09073
+        (reduces exactly to max - mean at uniform capacity 1).
+        """
+        if self.capacities is None:
+            live = self.loads[self.alive] if self._n_dead else self.loads
+            return float(live.max() - live.mean())
+        mask = self.alive if self._cap_mask is None else (self.alive & self._cap_mask)
+        l, c = self.loads[mask], self.capacities[mask]
+        return float((l / c).max() - l.sum() / c.sum())
 
     def imbalance_fraction(self) -> float:
-        """I(t) normalized by total outstanding work (0 when idle)."""
-        return self.imbalance() / max(float(self.loads.sum()), 1.0)
+        """I(t) normalized by the average (normalized) outstanding work per
+        unit capacity — scale-invariant, 0 when idle."""
+        if self.capacities is None:
+            return self.imbalance() / max(float(self.loads.sum()), 1.0)
+        mask = self.alive if self._cap_mask is None else (self.alive & self._cap_mask)
+        total = float(self.loads[mask].sum() / self.capacities[mask].sum())
+        return self.imbalance() / max(total, 1.0)
 
 
 class RoutingPolicy:
@@ -172,7 +254,8 @@ class RoutingPolicy:
         """Clear estimator state (tracker, cursors); loads live elsewhere."""
 
     def decide(self, key: int, loads: np.ndarray,
-               alive: Optional[np.ndarray] = None) -> int:
+               alive: Optional[np.ndarray] = None,
+               capacities: Optional[np.ndarray] = None) -> int:
         """One routing decision over a loads vector.
 
         ``alive`` is the live-replica mask (None == everyone up, the fast
@@ -182,6 +265,11 @@ class RoutingPolicy:
         deterministic candidate chain, RR skips dead slots, PoTC/W-Choices
         restrict their least-loaded choice to live candidates and spill to
         the global live argmin when all d candidates are dead).
+
+        ``capacities`` (arXiv 1705.09073) weights every load comparison by
+        ``load_i / c_i``; zero-capacity workers are folded into ``alive``
+        and take the same failover paths as dead replicas.  None keeps the
+        uniform-cluster path bit-identical.
         """
         raise NotImplementedError
 
@@ -198,19 +286,22 @@ class RoutingPolicy:
             raise ValueError(f"costs shape {costs.shape} != ({m},)")
         return costs
 
-    def route_batch(self, keys, costs=None) -> np.ndarray:
+    def route_batch(self, keys, costs=None, capacities=None) -> np.ndarray:
         """Route a stream from a fresh state; the per-request reference.
 
         Default implementation is the literal decide/acquire loop; overrides
         must stay bit-identical to it (that IS the adapter contract).
+        Overrides that hoist candidate hashing keep their fast path for
+        ``capacities=None`` and defer here for the capacity-weighted case.
         """
         self.reset()
         keys = np.asarray(keys).reshape(-1)
         costs = self._batch_costs(len(keys), costs)
-        ledger = LoadLedger(self.n)
+        ledger = LoadLedger(self.n, capacities=capacities)
+        alive = ledger.live_mask()
         out = np.empty(len(keys), dtype=np.int32)
         for i, k in enumerate(keys):
-            c = self.decide(int(k), ledger.loads)
+            c = self.decide(int(k), ledger.loads, alive, ledger.capacities)
             ledger.acquire(c, costs[i])
             out[i] = c
         return out
@@ -231,7 +322,9 @@ class KGPolicy(RoutingPolicy):
         self._chain_seeds = derive_seeds_np(seed, 1 + self.FAILOVER_CHAIN)
 
     def decide(self, key: int, loads: np.ndarray,
-               alive: Optional[np.ndarray] = None) -> int:
+               alive: Optional[np.ndarray] = None,
+               capacities: Optional[np.ndarray] = None) -> int:
+        alive = _cap_alive(alive, capacities)
         r = int(_hash_key_np(key, self._seeds, self.n)[0])
         if alive is None or alive[r]:
             return r
@@ -244,7 +337,10 @@ class KGPolicy(RoutingPolicy):
                 return int(r)
         return int(np.argmax(alive))
 
-    def route_batch(self, keys, costs=None) -> np.ndarray:
+    def route_batch(self, keys, costs=None, capacities=None) -> np.ndarray:
+        if capacities is not None and not (np.asarray(capacities) > 0).all():
+            # zero-capacity workers must take the rehash chain: generic loop
+            return super().route_batch(keys, costs, capacities)
         self.reset()
         keys = np.asarray(keys).reshape(-1)
         self._batch_costs(len(keys), costs)  # validate shape only
@@ -269,7 +365,9 @@ class RoundRobinPolicy(RoutingPolicy):
         self._step = 0
 
     def decide(self, key: int, loads: np.ndarray,
-               alive: Optional[np.ndarray] = None) -> int:
+               alive: Optional[np.ndarray] = None,
+               capacities: Optional[np.ndarray] = None) -> int:
+        alive = _cap_alive(alive, capacities)
         c = (self._offset + self._step) % self.n
         if alive is not None:
             while not alive[c]:  # skip dead slots; cycle stays uniform
@@ -278,7 +376,9 @@ class RoundRobinPolicy(RoutingPolicy):
         self._step += 1
         return c
 
-    def route_batch(self, keys, costs=None) -> np.ndarray:
+    def route_batch(self, keys, costs=None, capacities=None) -> np.ndarray:
+        if capacities is not None and not (np.asarray(capacities) > 0).all():
+            return super().route_batch(keys, costs, capacities)
         self.reset()
         keys = np.asarray(keys).reshape(-1)
         self._batch_costs(len(keys), costs)
@@ -302,7 +402,10 @@ class PoTCPolicy(RoutingPolicy):
         return _hash_key_np(key, self._seeds, self.n)
 
     def decide(self, key: int, loads: np.ndarray,
-               alive: Optional[np.ndarray] = None) -> int:
+               alive: Optional[np.ndarray] = None,
+               capacities: Optional[np.ndarray] = None) -> int:
+        alive = _cap_alive(alive, capacities)
+        loads = _cap_loads(loads, capacities)
         c = self.candidates(key)
         if alive is None:
             return int(c[np.argmin(loads[c])])
@@ -312,7 +415,9 @@ class PoTCPolicy(RoutingPolicy):
             return self._live_argmin(loads, alive)
         return int(c[np.argmin(np.where(alive[c], loads[c], np.inf))])
 
-    def route_batch(self, keys, costs=None) -> np.ndarray:
+    def route_batch(self, keys, costs=None, capacities=None) -> np.ndarray:
+        if capacities is not None:
+            return super().route_batch(keys, costs, capacities)
         self.reset()
         keys = np.asarray(keys).reshape(-1)
         costs = self._batch_costs(len(keys), costs)
@@ -354,15 +459,20 @@ class WChoicesPolicy(PoTCPolicy):
         return self.tracker.is_head(key, self.theta, min_count=self.min_count)
 
     def decide(self, key: int, loads: np.ndarray,
-               alive: Optional[np.ndarray] = None) -> int:
+               alive: Optional[np.ndarray] = None,
+               capacities: Optional[np.ndarray] = None) -> int:
         self.tracker.offer(key)
         if self.is_hot(key):
+            alive = _cap_alive(alive, capacities)
+            loads = _cap_loads(loads, capacities)
             if alive is None:
                 return int(np.argmin(loads))
             return self._live_argmin(loads, alive)
-        return super().decide(key, loads, alive)
+        return super().decide(key, loads, alive, capacities)
 
-    def route_batch(self, keys, costs=None) -> np.ndarray:
+    def route_batch(self, keys, costs=None, capacities=None) -> np.ndarray:
+        if capacities is not None:
+            return RoutingPolicy.route_batch(self, keys, costs, capacities)
         self.reset()
         keys = np.asarray(keys).reshape(-1)
         costs = self._batch_costs(len(keys), costs)
@@ -405,7 +515,8 @@ class _DevicePolicy(RoutingPolicy):
         self.interpret = interpret
 
     def decide(self, key: int, loads: np.ndarray,
-               alive: Optional[np.ndarray] = None) -> int:
+               alive: Optional[np.ndarray] = None,
+               capacities: Optional[np.ndarray] = None) -> int:
         raise NotImplementedError(
             f"{type(self).__name__} is device-backed and batch-only; "
             "use route_batch, or a host policy for per-request serving"
@@ -418,13 +529,24 @@ class _DevicePolicy(RoutingPolicy):
                 "device-backed policies route unit-cost messages only"
             )
 
+    def _kernel_capacities(self, capacities) -> Optional[np.ndarray]:
+        """Kernels normalize by a reciprocal-capacity row, so every capacity
+        must be strictly positive (fold zero-capacity workers out before the
+        device batch; host policies handle them via the alive mask)."""
+        cap = _check_capacities(self.n, capacities)
+        if cap is not None and (cap <= 0).any():
+            raise ValueError(
+                "device-backed policies need strictly positive capacities"
+            )
+        return cap
+
 
 class DeviceWChoicesPolicy(_DevicePolicy):
     """W-Choices on the in-kernel global-argmin path (kernels w_route)."""
 
     name = "w_choices_kernel"
 
-    def route_batch(self, keys, costs=None) -> np.ndarray:
+    def route_batch(self, keys, costs=None, capacities=None) -> np.ndarray:
         from repro.core.partitioners import w_choices_kernel_partition
 
         keys = np.asarray(keys).reshape(-1)
@@ -434,6 +556,7 @@ class DeviceWChoicesPolicy(_DevicePolicy):
                 keys, self.n, d=self.d, seed=self.seed,
                 theta=self.theta, capacity=self.capacity,
                 min_count=self.min_count, block=self.block,
+                capacities=self._kernel_capacities(capacities),
                 interpret=self.interpret,
             )
         )
@@ -452,7 +575,7 @@ class DeviceDChoicesPolicy(_DevicePolicy):
         self.d_max = max(int(min(d_max, n_replicas)), self.d)
         self.slack = slack
 
-    def route_batch(self, keys, costs=None) -> np.ndarray:
+    def route_batch(self, keys, costs=None, capacities=None) -> np.ndarray:
         from repro.core.partitioners import d_choices_kernel_partition
 
         keys = np.asarray(keys).reshape(-1)
@@ -462,6 +585,7 @@ class DeviceDChoicesPolicy(_DevicePolicy):
                 keys, self.n, d=self.d, d_max=self.d_max, seed=self.seed,
                 theta=self.theta, capacity=self.capacity, slack=self.slack,
                 min_count=self.min_count, block=self.block,
+                capacities=self._kernel_capacities(capacities),
                 interpret=self.interpret,
             )
         )
@@ -484,7 +608,7 @@ class ShardedWChoicesPolicy(_DevicePolicy):
         self.n_shards = n_shards
         self.sync_period = sync_period
 
-    def route_batch(self, keys, costs=None) -> np.ndarray:
+    def route_batch(self, keys, costs=None, capacities=None) -> np.ndarray:
         from repro.core.partitioners import w_choices_sharded_partition
 
         keys = np.asarray(keys).reshape(-1)
@@ -495,6 +619,7 @@ class ShardedWChoicesPolicy(_DevicePolicy):
                 capacity=self.capacity, min_count=self.min_count,
                 n_shards=self.n_shards, sync_period=self.sync_period,
                 block=self.block,
+                capacities=self._kernel_capacities(capacities),
             )
         )
 

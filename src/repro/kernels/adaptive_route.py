@@ -60,8 +60,14 @@ _waterfill_picks = waterfill_picks
 _head_table_ncand = head_table_ncand
 
 
-def _kernel(keys_ref, ncand_ref, seeds_ref, assign_ref, loads_ref, *,
-            n_workers, d_max, block, w_mode):
+def _kernel(keys_ref, ncand_ref, seeds_ref, *rest, n_workers, d_max, block,
+            w_mode, has_cap):
+    if has_cap:
+        icap_ref, assign_ref, loads_ref = rest
+        icap = icap_ref[...]  # (1, n_workers) f32 reciprocal capacities
+    else:
+        assign_ref, loads_ref = rest
+        icap = None
     chunk = keys_ref.shape[0]
     nblk = chunk // block
     seeds = seeds_ref[...]  # (d_max,) uint32
@@ -71,7 +77,8 @@ def _kernel(keys_ref, ncand_ref, seeds_ref, assign_ref, loads_ref, *,
         nc = ncand_ref[pl.ds(i * block, block)]  # (V,)
         cand = hash_candidates(kb, seeds, n_workers)  # (V, d_max)
         choice, _, _, loads = route_block(
-            cand, nc, loads, n_entities=n_workers, w_mode=w_mode
+            cand, nc, loads, n_entities=n_workers, w_mode=w_mode,
+            inv_cap=icap,
         )
         assign_ref[pl.ds(i * block, block)] = choice
         return loads
@@ -96,6 +103,7 @@ def adaptive_route(
     block: int = 128,
     interpret: Optional[bool] = None,
     w_mode: bool = False,
+    capacities: Optional[jnp.ndarray] = None,
 ):
     """Route keys (N,) int32 with per-key candidate counts n_cand (N,).
 
@@ -108,21 +116,38 @@ def adaptive_route(
     the sentinel check and the water-fill reduction out of the inner loop —
     D-Choices callers never emit the sentinel and pay nothing; sentinel-free
     streams route bit-identically under both settings.
+
+    `capacities` (optional (n_workers,) strictly positive weights) routes on
+    capacity-normalized loads (route_core inv_cap row, arXiv 1705.09073):
+    both the masked candidate argmin AND the W water-fill compare
+    loads * (1/c).  None leaves the program unchanged; uniform capacities
+    are bit-exact to it.
     """
     N = keys.shape[0]
     assert N % chunk == 0 and chunk % block == 0, (N, chunk, block)
     grid = (N // chunk,)
+    has_cap = capacities is not None
     kern = functools.partial(
-        _kernel, n_workers=n_workers, d_max=d_max, block=block, w_mode=w_mode
+        _kernel, n_workers=n_workers, d_max=d_max, block=block, w_mode=w_mode,
+        has_cap=has_cap,
     )
+    in_specs = [
+        pl.BlockSpec((chunk,), lambda i: (i,)),
+        pl.BlockSpec((chunk,), lambda i: (i,)),
+        pl.BlockSpec((d_max,), lambda i: (0,)),
+    ]
+    operands = [
+        keys.astype(jnp.int32), n_cand.astype(jnp.int32),
+        derive_seeds(seed, d_max),
+    ]
+    if has_cap:
+        icap = 1.0 / jnp.asarray(capacities, jnp.float32).reshape(1, n_workers)
+        in_specs.append(pl.BlockSpec((1, n_workers), lambda i: (0, 0)))
+        operands.append(icap)
     assign, loads = pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((chunk,), lambda i: (i,)),
-            pl.BlockSpec((chunk,), lambda i: (i,)),
-            pl.BlockSpec((d_max,), lambda i: (0,)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((chunk,), lambda i: (i,)),
             pl.BlockSpec((1, n_workers), lambda i: (i, 0)),
@@ -132,7 +157,7 @@ def adaptive_route(
             jax.ShapeDtypeStruct((N // chunk, n_workers), jnp.float32),
         ],
         interpret=resolve_interpret(interpret),
-    )(keys.astype(jnp.int32), n_cand.astype(jnp.int32), derive_seeds(seed, d_max))
+    )(*operands)
     return assign, loads
 
 
@@ -149,8 +174,14 @@ def adaptive_route(
 # ---------------------------------------------------------------------------
 
 
-def _kernel_online(keys_ref, tblk_ref, tbln_ref, seeds_ref, assign_ref,
-                   loads_ref, *, n_workers, d_base, d_max, block, w_mode):
+def _kernel_online(keys_ref, tblk_ref, tbln_ref, seeds_ref, *rest, n_workers,
+                   d_base, d_max, block, w_mode, has_cap):
+    if has_cap:
+        icap_ref, assign_ref, loads_ref = rest
+        icap = icap_ref[...]  # (1, n_workers) f32 reciprocal capacities
+    else:
+        assign_ref, loads_ref = rest
+        icap = None
     chunk = keys_ref.shape[0]
     nblk = chunk // block
     seeds = seeds_ref[...]  # (d_max,) uint32
@@ -163,7 +194,8 @@ def _kernel_online(keys_ref, tblk_ref, tbln_ref, seeds_ref, assign_ref,
         nc = head_table_ncand(kb, tk, tn, d_base, d_max)
         cand = hash_candidates(kb, seeds, n_workers)  # (V, d_max)
         choice, _, _, loads = route_block(
-            cand, nc, loads, n_entities=n_workers, w_mode=w_mode
+            cand, nc, loads, n_entities=n_workers, w_mode=w_mode,
+            inv_cap=icap,
         )
         assign_ref[pl.ds(i * block, block)] = choice
         return loads
@@ -191,6 +223,7 @@ def adaptive_route_online(
     block: int = 128,
     interpret: Optional[bool] = None,
     w_mode: bool = False,
+    capacities: Optional[jnp.ndarray] = None,
 ):
     """Route keys (N,) against per-block head tables (N/block, H).
 
@@ -209,20 +242,32 @@ def adaptive_route_online(
     assert N % chunk == 0 and chunk % block == 0, (N, chunk, block)
     assert tbl_keys.shape == (N // block, H) == tbl_ncand.shape
     grid = (N // chunk,)
+    has_cap = capacities is not None
     kern = functools.partial(
         _kernel_online, n_workers=n_workers, d_base=d_base, d_max=d_max,
-        block=block, w_mode=w_mode,
+        block=block, w_mode=w_mode, has_cap=has_cap,
     )
     blocks_per_chunk = chunk // block
+    in_specs = [
+        pl.BlockSpec((chunk,), lambda i: (i,)),
+        pl.BlockSpec((blocks_per_chunk, H), lambda i: (i, 0)),
+        pl.BlockSpec((blocks_per_chunk, H), lambda i: (i, 0)),
+        pl.BlockSpec((d_max,), lambda i: (0,)),
+    ]
+    operands = [
+        keys.astype(jnp.int32),
+        tbl_keys.astype(jnp.int32),
+        tbl_ncand.astype(jnp.int32),
+        derive_seeds(seed, d_max),
+    ]
+    if has_cap:
+        icap = 1.0 / jnp.asarray(capacities, jnp.float32).reshape(1, n_workers)
+        in_specs.append(pl.BlockSpec((1, n_workers), lambda i: (0, 0)))
+        operands.append(icap)
     assign, loads = pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((chunk,), lambda i: (i,)),
-            pl.BlockSpec((blocks_per_chunk, H), lambda i: (i, 0)),
-            pl.BlockSpec((blocks_per_chunk, H), lambda i: (i, 0)),
-            pl.BlockSpec((d_max,), lambda i: (0,)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((chunk,), lambda i: (i,)),
             pl.BlockSpec((1, n_workers), lambda i: (i, 0)),
@@ -232,12 +277,7 @@ def adaptive_route_online(
             jax.ShapeDtypeStruct((N // chunk, n_workers), jnp.float32),
         ],
         interpret=resolve_interpret(interpret),
-    )(
-        keys.astype(jnp.int32),
-        tbl_keys.astype(jnp.int32),
-        tbl_ncand.astype(jnp.int32),
-        derive_seeds(seed, d_max),
-    )
+    )(*operands)
     return assign, loads
 
 
@@ -255,13 +295,17 @@ def w_route(
     chunk: int = 1024,
     block: int = 128,
     interpret: Optional[bool] = None,
+    capacities: Optional[jnp.ndarray] = None,
 ):
     """W-Choices Pallas router: head keys (is_head != 0) go to the globally
     least-loaded worker via the in-kernel global argmin; tail keys take PKG's
     exact d-candidate step.  is_head (N,) is any int/bool array (e.g. from
     SpaceSavingTracker.head_counts); with block=1 and chunk=N this reproduces
     core.partitioners.w_choices_partition bit-exactly given the same head set
-    (the differential contract in tests/test_kernels.py).
+    (the differential contract in tests/test_kernels.py).  `capacities`
+    weights both the tail argmin and the head water-fill by 1/c (see
+    adaptive_route); the block=1 contract extends to the capacity-weighted
+    host scan.
 
     Returns (assign (N,), per-chunk loads (N/chunk, n_workers)).
     """
@@ -269,5 +313,5 @@ def w_route(
     n_cand = jnp.where(flags != 0, jnp.int32(W_SENTINEL), jnp.int32(d))
     return adaptive_route(
         keys, n_cand, n_workers, d_max=d, seed=seed, chunk=chunk, block=block,
-        interpret=interpret, w_mode=True,
+        interpret=interpret, w_mode=True, capacities=capacities,
     )

@@ -31,7 +31,13 @@ from repro.kernels.platform import resolve_interpret
 from repro.kernels.route_core import hash_candidates, route_block
 
 
-def _kernel(keys_ref, seeds_ref, assign_ref, loads_ref, *, n_workers, d, block):
+def _kernel(keys_ref, seeds_ref, *rest, n_workers, d, block, has_cap):
+    if has_cap:
+        icap_ref, assign_ref, loads_ref = rest
+        icap = icap_ref[...]  # (1, n_workers) f32 reciprocal capacities
+    else:
+        assign_ref, loads_ref = rest
+        icap = None
     chunk = keys_ref.shape[0]
     nblk = chunk // block
     seeds = seeds_ref[...]  # (d,) uint32
@@ -40,7 +46,8 @@ def _kernel(keys_ref, seeds_ref, assign_ref, loads_ref, *, n_workers, d, block):
         kb = keys_ref[pl.ds(i * block, block)]  # (V,)
         cand = hash_candidates(kb, seeds, n_workers)  # (V, d)
         choice, _, _, loads = route_block(
-            cand, None, loads, n_entities=n_workers, w_mode=False
+            cand, None, loads, n_entities=n_workers, w_mode=False,
+            inv_cap=icap,
         )
         assign_ref[pl.ds(i * block, block)] = choice
         return loads
@@ -60,23 +67,37 @@ def pkg_route(
     chunk: int = 1024,
     block: int = 128,
     interpret: Optional[bool] = None,
+    capacities: Optional[jnp.ndarray] = None,
 ):
     """Route keys (N,) int32 -> (assign (N,), per-chunk loads (N/chunk, n)).
 
     N must divide by chunk; chunk by block.  interpret=None resolves via
-    kernels.platform (compile on TPU, interpret elsewhere).
+    kernels.platform (compile on TPU, interpret elsewhere).  `capacities`
+    (optional (n_workers,) strictly positive weights, arXiv 1705.09073) makes
+    the candidate argmin capacity-normalized: the kernel receives a
+    reciprocal-capacity row and compares loads * (1/c).  None routes the
+    pre-capacity program unchanged; uniform capacities are bit-exact to it.
     """
     N = keys.shape[0]
     assert N % chunk == 0 and chunk % block == 0, (N, chunk, block)
     grid = (N // chunk,)
-    kern = functools.partial(_kernel, n_workers=n_workers, d=d, block=block)
+    has_cap = capacities is not None
+    kern = functools.partial(
+        _kernel, n_workers=n_workers, d=d, block=block, has_cap=has_cap
+    )
+    in_specs = [
+        pl.BlockSpec((chunk,), lambda i: (i,)),
+        pl.BlockSpec((d,), lambda i: (0,)),
+    ]
+    operands = [keys.astype(jnp.int32), derive_seeds(seed, d)]
+    if has_cap:
+        icap = 1.0 / jnp.asarray(capacities, jnp.float32).reshape(1, n_workers)
+        in_specs.append(pl.BlockSpec((1, n_workers), lambda i: (0, 0)))
+        operands.append(icap)
     assign, loads = pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((chunk,), lambda i: (i,)),
-            pl.BlockSpec((d,), lambda i: (0,)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((chunk,), lambda i: (i,)),
             pl.BlockSpec((1, n_workers), lambda i: (i, 0)),
@@ -86,5 +107,5 @@ def pkg_route(
             jax.ShapeDtypeStruct((N // chunk, n_workers), jnp.float32),
         ],
         interpret=resolve_interpret(interpret),
-    )(keys.astype(jnp.int32), derive_seeds(seed, d))
+    )(*operands)
     return assign, loads

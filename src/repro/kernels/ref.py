@@ -21,8 +21,17 @@ from repro.core.hashing import hash_choices
 from repro.kernels.route_core import head_table_ncand, oracle_block_step
 
 
+def _ref_inv_cap(capacities, n_workers):
+    """(n_workers,) f32 reciprocal-capacity row, or None — the SAME
+    1/f32(cap) the kernel wrappers form, so oracle and kernel normalize by
+    bit-identical factors."""
+    if capacities is None:
+        return None
+    return 1.0 / jnp.asarray(capacities, jnp.float32).reshape(n_workers)
+
+
 def ref_pkg_route(keys, n_workers: int, d: int = 2, seed: int = 0,
-                  chunk: int = 1024, block: int = 128):
+                  chunk: int = 1024, block: int = 128, capacities=None):
     """Chunked batch-greedy PKG (matches kernels/pkg_route.py).
 
     Chunks are independent local estimators; within a chunk, loads update
@@ -30,13 +39,15 @@ def ref_pkg_route(keys, n_workers: int, d: int = 2, seed: int = 0,
     """
     N = keys.shape[0]
     assert N % chunk == 0 and chunk % block == 0
+    icap = _ref_inv_cap(capacities, n_workers)
     cand = hash_choices(keys, n_workers, d=d, seed=seed)  # (N, d)
     cand = cand.reshape(N // chunk, chunk // block, block, d)
 
     def chunk_fn(cand_c):
         def step(loads, cb):  # cb (block, d)
             loads, choice, _, _ = oracle_block_step(
-                loads, cb, None, n_entities=n_workers, w_mode=False
+                loads, cb, None, n_entities=n_workers, w_mode=False,
+                inv_cap=icap,
             )
             return loads, choice
 
@@ -50,7 +61,7 @@ def ref_pkg_route(keys, n_workers: int, d: int = 2, seed: int = 0,
 
 def ref_adaptive_route(keys, n_cand, n_workers: int, d_max: int = 4,
                        seed: int = 0, chunk: int = 1024, block: int = 128,
-                       w_mode: bool = False):
+                       w_mode: bool = False, capacities=None):
     """Chunked batch-greedy with per-key candidate counts
     (matches kernels/adaptive_route.py, including the route_core MASK
     sentinel and, with w_mode=True, the W_SENTINEL water-fill path).
@@ -58,6 +69,7 @@ def ref_adaptive_route(keys, n_cand, n_workers: int, d_max: int = 4,
     Returns (assign (N,), loads (N//chunk, n_workers))."""
     N = keys.shape[0]
     assert N % chunk == 0 and chunk % block == 0
+    icap = _ref_inv_cap(capacities, n_workers)
     cand = hash_choices(keys, n_workers, d=d_max, seed=seed)  # (N, d_max)
     cand = cand.reshape(N // chunk, chunk // block, block, d_max)
     nc = n_cand.astype(jnp.int32).reshape(N // chunk, chunk // block, block)
@@ -66,7 +78,8 @@ def ref_adaptive_route(keys, n_cand, n_workers: int, d_max: int = 4,
         def step(loads, inp):  # cb (block, d_max), ncb (block,)
             cb, ncb = inp
             loads, choice, _, _ = oracle_block_step(
-                loads, cb, ncb, n_entities=n_workers, w_mode=w_mode
+                loads, cb, ncb, n_entities=n_workers, w_mode=w_mode,
+                inv_cap=icap,
             )
             return loads, choice
 
@@ -81,7 +94,7 @@ def ref_adaptive_route(keys, n_cand, n_workers: int, d_max: int = 4,
 def ref_adaptive_route_online(keys, tbl_keys, tbl_ncand, n_workers: int,
                               d_base: int = 2, d_max: int = 8, seed: int = 0,
                               chunk: int = 1024, block: int = 128,
-                              w_mode: bool = False):
+                              w_mode: bool = False, capacities=None):
     """Chunked batch-greedy against per-block head tables
     (matches kernels/adaptive_route.py::adaptive_route_online; the table
     lookup is literally the kernels' head_table_ncand and the greedy core
@@ -91,6 +104,7 @@ def ref_adaptive_route_online(keys, tbl_keys, tbl_ncand, n_workers: int,
     N = keys.shape[0]
     H = tbl_keys.shape[1]
     assert N % chunk == 0 and chunk % block == 0
+    icap = _ref_inv_cap(capacities, n_workers)
     cand = hash_choices(keys, n_workers, d=d_max, seed=seed)  # (N, d_max)
     cand = cand.reshape(N // chunk, chunk // block, block, d_max)
     kb = keys.astype(jnp.int32).reshape(N // chunk, chunk // block, block)
@@ -102,7 +116,8 @@ def ref_adaptive_route_online(keys, tbl_keys, tbl_ncand, n_workers: int,
             cb, kbb, tkb, tnb = inp  # (block,d_max) (block,) (H,) (H,)
             nc = head_table_ncand(kbb, tkb, tnb, d_base, d_max)
             loads, choice, _, _ = oracle_block_step(
-                loads, cb, nc, n_entities=n_workers, w_mode=w_mode
+                loads, cb, nc, n_entities=n_workers, w_mode=w_mode,
+                inv_cap=icap,
             )
             return loads, choice
 
@@ -115,7 +130,7 @@ def ref_adaptive_route_online(keys, tbl_keys, tbl_ncand, n_workers: int,
 
 
 def ref_w_route(keys, is_head, n_workers: int, d: int = 2, seed: int = 0,
-                chunk: int = 1024, block: int = 128):
+                chunk: int = 1024, block: int = 128, capacities=None):
     """Oracle for kernels/adaptive_route.py::w_route: head-flagged keys take
     the global argmin (W-Choices), tail keys PKG's d-candidate step.
 
@@ -124,13 +139,13 @@ def ref_w_route(keys, is_head, n_workers: int, d: int = 2, seed: int = 0,
     n_cand = jnp.where(flags != 0, jnp.int32(W_SENTINEL), jnp.int32(d))
     return ref_adaptive_route(
         keys, n_cand, n_workers, d_max=d, seed=seed, chunk=chunk, block=block,
-        w_mode=True,
+        w_mode=True, capacities=capacities,
     )
 
 
 def ref_w_route_online(keys, tbl_keys, tbl_ncand, n_workers: int,
                        d_base: int = 2, d_max: int = 8, seed: int = 0,
-                       chunk: int = 1024, block: int = 128):
+                       chunk: int = 1024, block: int = 128, capacities=None):
     """Oracle for the online W-Choices path: per-block head tables emitted by
     estimation.online_head_tables(any_worker=True), whose W_SENTINEL entries
     route through the global argmin.  Identical code to
@@ -139,7 +154,7 @@ def ref_w_route_online(keys, tbl_keys, tbl_ncand, n_workers: int,
     separately so callers state which contract they exercise."""
     return ref_adaptive_route_online(
         keys, tbl_keys, tbl_ncand, n_workers, d_base=d_base, d_max=d_max,
-        seed=seed, chunk=chunk, block=block, w_mode=True,
+        seed=seed, chunk=chunk, block=block, w_mode=True, capacities=capacities,
     )
 
 

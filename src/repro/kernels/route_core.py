@@ -63,7 +63,7 @@ def hash_candidates(kb, seeds, n_entities: int):
     return (h % jnp.uint32(n_entities)).astype(jnp.int32)
 
 
-def waterfill_picks(loads, *, n_workers, block):
+def waterfill_picks(loads, *, n_workers, block, inv_cap=None):
     """First `block` picks of sequential global-argmin routing from the
     (1, n_workers) loads row: pick r is where the r-th head message of a
     block goes, with every earlier pick's unit load accounted.
@@ -82,16 +82,32 @@ def waterfill_picks(loads, *, n_workers, block):
     values and ties are IEEE-exact; every oracle imports this function so
     kernel and oracle cannot drift.
 
+    With `inv_cap` (a (1, n_workers) reciprocal-capacity row, arXiv
+    1705.09073) the argmin runs over capacity-normalized values
+    ``(L_j + t) / c_j`` — computed as ``(L_j + t) * inv_cap_j``, the SAME
+    float product the sequential host scan forms, so block=1 stays
+    bit-exact to the host and any block stays exact vs the oracle (shared
+    code).  The multiset argument is unchanged: values still increase
+    strictly in t for every worker (inv_cap > 0).  A uniform inv_cap of
+    1.0 multiplies exactly and reproduces the unweighted picks bit-for-bit.
+
     Returns picks (block,) int32 worker ids.
     """
     pad = -n_workers % LANES
     row = loads
+    icap = inv_cap
     if pad:
         row = jnp.concatenate(
             [row, jnp.full((1, pad), MASK, jnp.float32)], axis=1
         )
+        if icap is not None:
+            icap = jnp.concatenate(
+                [icap, jnp.ones((1, pad), jnp.float32)], axis=1
+            )
     t = jnp.arange(block, dtype=jnp.float32)
     vals = row.reshape(n_workers + pad, 1) + t[None, :]  # (W_pad, B): (j, t)
+    if icap is not None:
+        vals = vals * icap.reshape(n_workers + pad, 1)
     _, idx = lax.top_k(-vals.reshape(-1), block)  # ties -> j-major
     return (idx // block).astype(jnp.int32)
 
@@ -120,7 +136,7 @@ def _mask_and_flag(lc, nc, d_max: int, w_mode: bool):
     return jnp.where(col[None, :] < nc_tail[:, None], lc, jnp.float32(MASK)), is_w
 
 
-def route_block(cand, nc, loads, *, n_entities, w_mode):
+def route_block(cand, nc, loads, *, n_entities, w_mode, inv_cap=None):
     """The kernel-side masked-greedy routing core for one vector block.
 
     cand (V, d_max) int32 candidate entity ids, nc (V,) int32 candidate
@@ -136,6 +152,14 @@ def route_block(cand, nc, loads, *, n_entities, w_mode):
     the candidate lookup, ones @ one-hot(choice) for the histogram update —
     no gathers or scatters (DESIGN.md SS2/SS7).
 
+    `inv_cap` (optional (1, n_entities) f32 reciprocal-capacity row) makes
+    every comparison capacity-normalized: the fetch reads the normalized
+    row ``loads * inv_cap`` and the water-fill receives inv_cap, while the
+    CARRY stays the raw integer-count histogram (the +1 update is exact and
+    capacity only ever rescales comparisons).  inv_cap=None skips the
+    multiply entirely — the program is unchanged — and a uniform row of 1.0
+    multiplies exactly, so both are bit-identical to the unweighted kernel.
+
     With w_mode (static), lanes with nc == W_SENTINEL take the W-Choices
     path: the r-th such lane of the block gets the r-th water-fill argmin of
     the block-start loads row (waterfill_picks), so consecutive head
@@ -148,9 +172,10 @@ def route_block(cand, nc, loads, *, n_entities, w_mode):
     V, d_max = cand.shape
     eid = jnp.arange(n_entities, dtype=jnp.int32)
     onehot_c = (cand[..., None] == eid).astype(jnp.float32)  # (V, d_max, n)
+    row = loads if inv_cap is None else loads * inv_cap
     lc = jax.lax.dot_general(
         onehot_c.reshape(V * d_max, n_entities),
-        loads.reshape(n_entities, 1),
+        row.reshape(n_entities, 1),
         (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     ).reshape(V, d_max)
@@ -162,7 +187,9 @@ def route_block(cand, nc, loads, *, n_entities, w_mode):
         # a one-hot matmul (gather-free, DESIGN.md SS7; picks < n_entities
         # are f32-exact).  rank < V always: at most V head lanes precede.
         rank = jnp.cumsum(is_w.astype(jnp.int32)) - is_w  # (V,)
-        picks = waterfill_picks(loads, n_workers=n_entities, block=V)
+        picks = waterfill_picks(
+            loads, n_workers=n_entities, block=V, inv_cap=inv_cap
+        )
         lane = jnp.arange(V, dtype=jnp.int32)
         onehot_r = (rank[:, None] == lane[None, :]).astype(jnp.float32)  # (V, V)
         head_choice = jax.lax.dot_general(
@@ -176,10 +203,11 @@ def route_block(cand, nc, loads, *, n_entities, w_mode):
     return choice, sel, is_w, loads + hist[None, :]
 
 
-def oracle_block_step(loads, cand, nc, *, n_entities, w_mode):
+def oracle_block_step(loads, cand, nc, *, n_entities, w_mode, inv_cap=None):
     """The host-side (gather-based) twin of route_block — one vector block of
     the masked batch-greedy, shared by every ref.py oracle and the host MoE
-    router modes.  loads (n_entities,) f32, cand (V, d_max), nc (V,) or None.
+    router modes.  loads (n_entities,) f32, cand (V, d_max), nc (V,) or None,
+    inv_cap (n_entities,) f32 reciprocal capacities or None.
     Returns (new_loads, choice, sel, is_w).
 
     The fetch is a plain gather (loads[cand]) and the W pick a plain indexed
@@ -188,14 +216,16 @@ def oracle_block_step(loads, cand, nc, *, n_entities, w_mode):
     straightforward indexing while the mask/sentinel/tie-break logic stays
     shared (same _mask_and_flag, same waterfill_picks)."""
     d_max = cand.shape[-1]
-    lc = loads[cand]  # (V, d_max)
+    row = loads if inv_cap is None else loads * inv_cap
+    lc = row[cand]  # (V, d_max)
     lc, is_w = _mask_and_flag(lc, nc, d_max, w_mode)
     sel = jnp.argmin(lc, axis=-1)
     choice = jnp.take_along_axis(cand, sel[:, None], axis=-1)[:, 0]
     if w_mode:
         rank = jnp.cumsum(is_w.astype(jnp.int32)) - is_w
         picks = waterfill_picks(
-            loads[None, :], n_workers=n_entities, block=cand.shape[0]
+            loads[None, :], n_workers=n_entities, block=cand.shape[0],
+            inv_cap=None if inv_cap is None else inv_cap[None, :],
         )
         choice = jnp.where(is_w, picks[rank], choice)
     hist = jax.nn.one_hot(choice, n_entities, dtype=jnp.float32).sum(0)

@@ -10,6 +10,15 @@ work — the number printed as "outstanding imbalance" is a true queue-depth
 imbalance, not a cumulative total.  Cumulative routed-work balance and the
 prefix-cache hit-rate are reported alongside, plus per-tenant SLO violations
 over a skewed multi-tenant session stream.
+
+Operational knobs mirror the simulator's failure/overload/elastic surfaces
+(docs/operator-guide.md): --queue-bound bounds each replica's FIFO and
+sheds overflow, --kill-at fails a replica mid-stream (its queue drains and
+requeues over the live mask), --capacities gives replicas heterogeneous
+speeds (a pattern like "1,2,4" tiles across the pool; routing normalizes
+loads by capacity and the simulator serves at the true rates), and
+--autoscale MIN:MAX runs serving.sim.Autoscaler so the live pool tracks the
+offered load.
 """
 from __future__ import annotations
 
@@ -49,6 +58,14 @@ def main() -> None:
                     help="kill one replica after this fraction of the stream "
                          "(0-1): its queue drains and redistributes via the "
                          "live-replica mask")
+    ap.add_argument("--capacities", default=None, metavar="C1,C2,...",
+                    help="per-replica speed pattern, tiled across the pool "
+                         "(e.g. '1,2,4'): load comparisons become capacity-"
+                         "normalized and replicas serve at their true rates")
+    ap.add_argument("--autoscale", default=None, metavar="MIN:MAX",
+                    help="elastic replica pool (serving.sim.Autoscaler): "
+                         "start at MIN live replicas, grow to at most MAX "
+                         "under load, shrink back in the lulls")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -56,7 +73,25 @@ def main() -> None:
     from repro.core.routing import make_policy
     from repro.core.streams import multi_tenant_stream
     from repro.models import init_params
-    from repro.serving import PolicyScheduler, ServeEngine, simulate_serving
+    from repro.serving import (
+        Autoscaler,
+        PolicyScheduler,
+        ServeEngine,
+        simulate_serving,
+    )
+
+    capacities = None
+    if args.capacities is not None:
+        pat = np.asarray([float(c) for c in args.capacities.split(",")])
+        capacities = np.resize(pat, args.replicas)
+    autoscaler = None
+    if args.autoscale is not None:
+        lo, hi = (int(v) for v in args.autoscale.split(":"))
+        autoscaler = Autoscaler(
+            min_replicas=lo, max_replicas=hi, initial=lo,
+            check_every=max(args.requests // 100, 1),
+            cooldown=max(args.requests // 40, 1),
+        )
 
     cfg = make_tiny(get_config(args.arch)) if args.tiny else get_config(args.arch)
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
@@ -87,17 +122,22 @@ def main() -> None:
         f"prefix-cache {args.cache_capacity}/replica, SLO {args.slo}"
         + (f", queue-bound {args.queue_bound}" if args.queue_bound else "")
         + (f", kill replica 0 @ {args.kill_at:.0%}" if kill_schedule else "")
+        + (f", capacities {args.capacities} tiled" if capacities is not None
+           else "")
+        + (f", autoscale {args.autoscale}" if autoscaler else "")
         + ":"
     )
     order = [args.scheduler] + [s for s in SCHEDULERS if s != args.scheduler]
     for name in order:
         sched = PolicyScheduler(
-            make_policy(name, args.replicas, d=2, seed=args.seed)
+            make_policy(name, args.replicas, d=2, seed=args.seed),
+            capacities=capacities,
         )
         res = simulate_serving(
             sched, keys, tenants=tenants, utilization=args.utilization,
             cache_capacity=args.cache_capacity, slo=args.slo,
             queue_bound=args.queue_bound, kill_schedule=kill_schedule,
+            autoscaler=autoscaler,
         )
         star = "*" if name == args.scheduler else " "
         print(
@@ -108,6 +148,7 @@ def main() -> None:
             f"shed={res.shed}  requeued={res.requeued}  "
             f"SLO-violating-tenants={res.tenant_report['tenants_violating']}"
             f"/{args.tenants}  session-fanout<= {res.session_fanout_max}"
+            + (f"  scale-events={len(res.scale_events)}" if autoscaler else "")
         )
         assert res.completed + res.shed == args.requests, "lost completions"
         assert sched.loads.sum() == 0.0, "drain left outstanding work"

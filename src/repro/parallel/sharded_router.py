@@ -69,15 +69,18 @@ def shard_grid(m: int, n_shards: int, sync_period: int, block: int) -> int:
     return max(-(-m_local // epoch), 1) * epoch
 
 
-def _block_scan(loads0, cand_e, nc_e, *, n_workers: int, w_mode: bool):
+def _block_scan(loads0, cand_e, nc_e, *, n_workers: int, w_mode: bool,
+                inv_cap=None):
     """One epoch on one shard: scan route_block over sync_period blocks from
     the epoch-start (globally synced) loads row.  Returns (epoch-end local
-    loads (1, n_workers), choices (sync_period, block))."""
+    loads (1, n_workers), choices (sync_period, block)).  inv_cap
+    (1, n_workers) f32 makes every block's argmin capacity-normalized."""
 
     def blk(loads, inp):
         cand_b, nc_b = inp if nc_e is not None else (inp, None)
         choice, _, _, loads = route_block(
-            cand_b, nc_b, loads, n_entities=n_workers, w_mode=w_mode
+            cand_b, nc_b, loads, n_entities=n_workers, w_mode=w_mode,
+            inv_cap=inv_cap,
         )
         return loads, choice
 
@@ -87,11 +90,13 @@ def _block_scan(loads0, cand_e, nc_e, *, n_workers: int, w_mode: bool):
 
 @functools.lru_cache(maxsize=None)
 def _build_sharded(n_workers, d_max, n_shards, n_epochs, sync_period, block,
-                   w_mode, has_nc, mesh):
+                   w_mode, has_nc, has_cap, has_w, mesh):
     """Jitted shard_map program for one static configuration."""
 
-    def shard_fn(keys_l, nc_l, seeds):
-        # keys_l (m_local,) — this shard's contiguous sub-stream
+    def shard_fn(keys_l, nc_l, seeds, icap, w_s):
+        # keys_l (m_local,) — this shard's contiguous sub-stream; icap
+        # (1, n_workers) replicated reciprocal capacities or None; w_s (1,)
+        # this shard's load-sync delta weight or None.
         cand = hash_candidates(keys_l, seeds, n_workers)
         cand = cand.reshape(n_epochs, sync_period, block, d_max)
         nc = None if nc_l is None else nc_l.reshape(n_epochs, sync_period, block)
@@ -99,11 +104,18 @@ def _build_sharded(n_workers, d_max, n_shards, n_epochs, sync_period, block,
         def epoch(loads_g, inp):
             cand_e, nc_e = inp if nc is not None else (inp, None)
             loads_end, choices = _block_scan(
-                loads_g, cand_e, nc_e, n_workers=n_workers, w_mode=w_mode
+                loads_g, cand_e, nc_e, n_workers=n_workers, w_mode=w_mode,
+                inv_cap=icap,
             )
             # load-sync: every shard contributes its epoch delta; the synced
-            # row is the exact global histogram at the epoch boundary.
-            delta = lax.psum(loads_end - loads_g, SHARD_AXIS)
+            # row is the exact global histogram at the epoch boundary.  With
+            # shard weights each delta is scaled BEFORE the psum (the
+            # PR-8-follow-up capacity weighting); w == 1 is bit-exact to the
+            # unweighted sync.
+            delta = loads_end - loads_g
+            if w_s is not None:
+                delta = w_s.reshape(1, 1) * delta
+            delta = lax.psum(delta, SHARD_AXIS)
             return loads_g + delta, choices
 
         loads0 = jnp.zeros((1, n_workers), jnp.float32)
@@ -111,15 +123,22 @@ def _build_sharded(n_workers, d_max, n_shards, n_epochs, sync_period, block,
         loads_f, assign = lax.scan(epoch, loads0, xs)
         return assign.reshape(-1), loads_f.reshape(n_workers)
 
-    if has_nc:
-        fn = shard_fn
-    else:
-        fn = lambda keys_l, seeds: shard_fn(keys_l, None, seeds)  # noqa: E731
+    def fn(*a):
+        it = iter(a)
+        keys_l = next(it)
+        nc_l = next(it) if has_nc else None
+        seeds = next(it)
+        icap = next(it) if has_cap else None
+        w_s = next(it) if has_w else None
+        return shard_fn(keys_l, nc_l, seeds, icap, w_s)
+
     # specs live in parallel.sharding next to the model-sharding plans
     # (lazy import: sharding pulls in the model registry)
     from repro.parallel.sharding import stream_shard_specs
 
-    in_specs, out_specs = stream_shard_specs(has_ncand=has_nc)
+    in_specs, out_specs = stream_shard_specs(
+        has_ncand=has_nc, has_cap=has_cap, has_weights=has_w
+    )
     mapped = shard_map(
         fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_rep=False,
@@ -129,10 +148,10 @@ def _build_sharded(n_workers, d_max, n_shards, n_epochs, sync_period, block,
 
 @functools.lru_cache(maxsize=None)
 def _build_ref(n_workers, d_max, n_shards, n_epochs, sync_period, block,
-               w_mode, has_nc):
+               w_mode, has_nc, has_cap, has_w):
     """Jitted single-device oracle: vmap over the shard axis, psum -> sum."""
 
-    def ref_fn(keys, nc_all, seeds):
+    def ref_fn(keys, nc_all, seeds, icap, w):
         cand = hash_candidates(keys, seeds, n_workers)
         cand = cand.reshape(n_shards, n_epochs, sync_period, block, d_max)
         cand = cand.swapaxes(0, 1)  # epoch-major for the outer scan
@@ -146,15 +165,18 @@ def _build_ref(n_workers, d_max, n_shards, n_epochs, sync_period, block,
 
             def per_shard(c_s, n_s=None):
                 return _block_scan(
-                    loads_g, c_s, n_s, n_workers=n_workers, w_mode=w_mode
+                    loads_g, c_s, n_s, n_workers=n_workers, w_mode=w_mode,
+                    inv_cap=icap,
                 )
 
             if nc_e is None:
                 loads_end, choices = jax.vmap(per_shard)(cand_e)
             else:
                 loads_end, choices = jax.vmap(per_shard)(cand_e, nc_e)
-            delta = (loads_end - loads_g).sum(axis=0)
-            return loads_g + delta, choices
+            deltas = loads_end - loads_g  # (n_shards, 1, n_workers)
+            if w is not None:
+                deltas = w[:, None, None] * deltas
+            return loads_g + deltas.sum(axis=0), choices
 
         loads0 = jnp.zeros((1, n_workers), jnp.float32)
         xs = cand if nc is None else (cand, nc)
@@ -162,9 +184,16 @@ def _build_ref(n_workers, d_max, n_shards, n_epochs, sync_period, block,
         # (n_epochs, n_shards, sync, block) -> shard-major stream order
         return assign.swapaxes(0, 1).reshape(-1), loads_f.reshape(n_workers)
 
-    if has_nc:
-        return jax.jit(ref_fn)
-    return jax.jit(lambda keys, seeds: ref_fn(keys, None, seeds))
+    def fn(*a):
+        it = iter(a)
+        keys = next(it)
+        nc_all = next(it) if has_nc else None
+        seeds = next(it)
+        icap = next(it) if has_cap else None
+        w = next(it) if has_w else None
+        return ref_fn(keys, nc_all, seeds, icap, w)
+
+    return jax.jit(fn)
 
 
 def _check_shapes(N: int, n_shards: int, sync_period: int, block: int) -> int:
@@ -192,6 +221,8 @@ def sharded_route(
     block: int = 128,
     w_mode: bool = False,
     mesh=None,
+    capacities: Optional[jnp.ndarray] = None,
+    shard_weights: Optional[jnp.ndarray] = None,
 ):
     """Route keys (N,) over an n_shards-device ("data",) mesh.
 
@@ -202,6 +233,14 @@ def sharded_route(
     entries take the global-argmin W path under ``w_mode=True`` — same
     contract as kernels.adaptive_route).  Returns (assign (N,) int32,
     final synced global loads (n_workers,) f32).
+
+    ``capacities`` ((n_workers,) strictly positive) makes every shard's
+    argmin capacity-normalized — each shard receives the same replicated
+    reciprocal-capacity row the single-core kernels consume.
+    ``shard_weights`` ((n_shards,) non-negative f32) scales each shard's
+    load-sync delta before the psum, weighting the synced histogram by
+    per-shard capacity; None or all-ones is bit-exact to the unweighted
+    sync (integer counts in f32).
 
     ``n_shards=1, sync_period=1`` is bit-exact to the single-core Pallas
     routers (pkg_route / adaptive_route / w_route) over one chunk — they all
@@ -215,12 +254,21 @@ def sharded_route(
         mesh = make_stream_mesh(n_shards)
     fn = _build_sharded(
         n_workers, d_max, n_shards, n_epochs, sync_period, block,
-        bool(w_mode), n_cand is not None, mesh,
+        bool(w_mode), n_cand is not None, capacities is not None,
+        shard_weights is not None, mesh,
     )
     seeds = derive_seeds(seed, d_max)
-    if n_cand is None:
-        return fn(keys.astype(jnp.int32), seeds)
-    return fn(keys.astype(jnp.int32), n_cand.astype(jnp.int32), seeds)
+    args = [keys.astype(jnp.int32)]
+    if n_cand is not None:
+        args.append(n_cand.astype(jnp.int32))
+    args.append(seeds)
+    if capacities is not None:
+        args.append(
+            1.0 / jnp.asarray(capacities, jnp.float32).reshape(1, n_workers)
+        )
+    if shard_weights is not None:
+        args.append(jnp.asarray(shard_weights, jnp.float32).reshape(n_shards))
+    return fn(*args)
 
 
 def ref_sharded_route(
@@ -234,21 +282,34 @@ def ref_sharded_route(
     sync_period: int = 1,
     block: int = 128,
     w_mode: bool = False,
+    capacities: Optional[jnp.ndarray] = None,
+    shard_weights: Optional[jnp.ndarray] = None,
 ):
     """Single-device oracle of sharded_route: identical epoch/block scans,
     shard axis vmap-ed, psum replaced by a sum over shards.  Bit-exact to
     the shard_map program (loads are integer counts in f32, so the reduction
-    order cannot matter), and the path single-device benches/tests run."""
+    order cannot matter; weighted deltas sum in the same shard-major order
+    the psum's ring reduction uses on a 1-D mesh), and the path
+    single-device benches/tests run."""
     N = keys.shape[0]
     n_epochs = _check_shapes(N, n_shards, sync_period, block)
     fn = _build_ref(
         n_workers, d_max, n_shards, n_epochs, sync_period, block,
-        bool(w_mode), n_cand is not None,
+        bool(w_mode), n_cand is not None, capacities is not None,
+        shard_weights is not None,
     )
     seeds = derive_seeds(seed, d_max)
-    if n_cand is None:
-        return fn(keys.astype(jnp.int32), seeds)
-    return fn(keys.astype(jnp.int32), n_cand.astype(jnp.int32), seeds)
+    args = [keys.astype(jnp.int32)]
+    if n_cand is not None:
+        args.append(n_cand.astype(jnp.int32))
+    args.append(seeds)
+    if capacities is not None:
+        args.append(
+            1.0 / jnp.asarray(capacities, jnp.float32).reshape(1, n_workers)
+        )
+    if shard_weights is not None:
+        args.append(jnp.asarray(shard_weights, jnp.float32).reshape(n_shards))
+    return fn(*args)
 
 
 def sharded_pkg_route(keys, n_workers: int, d: int = 2, **kw):
@@ -299,7 +360,7 @@ def routed_step_roofline(
     N = n_shards * n_epochs * sync_period * block
     fn = _build_sharded(
         n_workers, d_max, n_shards, n_epochs, sync_period, block,
-        bool(w_mode), True, mesh,
+        bool(w_mode), True, False, False, mesh,
     )
     args = (
         jax.ShapeDtypeStruct((N,), jnp.int32),

@@ -37,14 +37,27 @@ __all__ = [
 ]
 
 
-def stream_shard_specs(has_ncand: bool = True):
+def stream_shard_specs(
+    has_ncand: bool = True, has_cap: bool = False, has_weights: bool = False
+):
     """(in_specs, out_specs) for shard_map-ing the sharded stream router
     (parallel/sharded_router.py) over a ("data",) mesh: the key stream (and
     its per-message candidate counts, when present) split over "data", the
     hash-seed family replicated; assignments split, the synced global loads
-    row replicated (it is psum-ed every load-sync epoch)."""
-    ins = (P("data"), P("data"), P()) if has_ncand else (P("data"), P())
-    return ins, (P("data"), P())
+    row replicated (it is psum-ed every load-sync epoch).  Optional trailing
+    operands, in order: the reciprocal-capacity row (replicated — every
+    shard normalizes by the same worker capacities) and the per-shard
+    load-sync delta weights (split over "data": each shard reads only its
+    own weight)."""
+    ins = [P("data")]
+    if has_ncand:
+        ins.append(P("data"))
+    ins.append(P())
+    if has_cap:
+        ins.append(P())
+    if has_weights:
+        ins.append(P("data"))
+    return tuple(ins), (P("data"), P())
 
 
 @dataclasses.dataclass(frozen=True)

@@ -5,7 +5,7 @@ from repro.serving.scheduler import (
     RoundRobinScheduler,
     WChoicesScheduler,
 )
-from repro.serving.sim import SimResult, simulate_serving
+from repro.serving.sim import Autoscaler, SimResult, simulate_serving
 from repro.serving.engine import ServeEngine
 
 __all__ = [
@@ -14,6 +14,7 @@ __all__ = [
     "PoTCScheduler",
     "RoundRobinScheduler",
     "WChoicesScheduler",
+    "Autoscaler",
     "SimResult",
     "simulate_serving",
     "ServeEngine",

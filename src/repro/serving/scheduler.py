@@ -55,9 +55,16 @@ class PolicyScheduler:
     from scratch), and sharing one policy across schedulers would couple
     their routing through the shared tracker/cursor — give each scheduler
     its own instance (make_policy is cheap).
+
+    ``capacities`` (optional (n,) non-negative per-replica speeds, arXiv
+    1705.09073) lands in the ledger and reaches every decide() call: load
+    comparisons become capacity-normalized (least ``load/c`` wins) and
+    zero-capacity replicas are folded into the dead mask.  None keeps the
+    unweighted path bit-identical; uniform capacities reproduce it exactly.
     """
 
-    def __init__(self, policy: RoutingPolicy, strict: bool = False):
+    def __init__(self, policy: RoutingPolicy, strict: bool = False,
+                 capacities=None):
         if not policy.per_request:
             raise ValueError(
                 f"policy {policy.name!r} is batch-only (device-backed); "
@@ -65,7 +72,8 @@ class PolicyScheduler:
             )
         policy.reset()  # the adapter==route_batch contract needs fresh state
         self.policy = policy
-        self.ledger = LoadLedger(policy.n, strict=strict)
+        self.ledger = LoadLedger(policy.n, strict=strict,
+                                 capacities=capacities)
 
     @property
     def n(self) -> int:
@@ -77,7 +85,8 @@ class PolicyScheduler:
 
     def route(self, key: int, cost: float = 1.0) -> int:
         c = self.policy.decide(
-            int(key), self.ledger.loads, self.ledger.live_mask()
+            int(key), self.ledger.loads, self.ledger.live_mask(),
+            capacities=self.ledger.capacities,
         )
         self.ledger.acquire(c, cost)
         return c
@@ -97,8 +106,10 @@ class PolicyScheduler:
 class PoTCScheduler(PolicyScheduler):
     """Power-of-two-choices with local load estimation per frontend."""
 
-    def __init__(self, n_replicas: int, d: int = 2, seed: int = 0):
-        super().__init__(PoTCPolicy(n_replicas, d=d, seed=seed))
+    def __init__(self, n_replicas: int, d: int = 2, seed: int = 0,
+                 capacities=None):
+        super().__init__(PoTCPolicy(n_replicas, d=d, seed=seed),
+                         capacities=capacities)
         self.d = self.policy.d
         self.seed = seed
 
@@ -106,31 +117,39 @@ class PoTCScheduler(PolicyScheduler):
 class KGScheduler(PolicyScheduler):
     """Sticky key-hashing (single choice)."""
 
-    def __init__(self, n_replicas: int, seed: int = 0):
-        super().__init__(KGPolicy(n_replicas, seed=seed))
+    def __init__(self, n_replicas: int, seed: int = 0, capacities=None):
+        super().__init__(KGPolicy(n_replicas, seed=seed),
+                         capacities=capacities)
         self.seed = seed
 
 
 class RoundRobinScheduler(PolicyScheduler):
     """Cyclic routing; the seed sets a scrambled start offset."""
 
-    def __init__(self, n_replicas: int, seed: int = 0):
-        super().__init__(RoundRobinPolicy(n_replicas, seed=seed))
+    def __init__(self, n_replicas: int, seed: int = 0, capacities=None):
+        super().__init__(RoundRobinPolicy(n_replicas, seed=seed),
+                         capacities=capacities)
         self.seed = seed
 
 
 class WChoicesScheduler(PolicyScheduler):
     """W-Choices: hot session ids may route to any replica; cold sessions
-    keep PoTC's d-candidate step and <= d replica fanout."""
+    keep PoTC's d-candidate step and <= d replica fanout.
+
+    ``capacity`` sizes the SPACESAVING tracker (how many hot session ids it
+    can hold); ``capacities`` are the per-replica speeds — unrelated knobs
+    that happen to share a stem.
+    """
 
     def __init__(self, n_replicas: int, d: int = 2, seed: int = 0,
                  capacity: int = 256, theta: Optional[float] = None,
-                 min_count: int = 8):
+                 min_count: int = 8, capacities=None):
         super().__init__(
             WChoicesPolicy(
                 n_replicas, d=d, seed=seed, capacity=capacity, theta=theta,
                 min_count=min_count,
-            )
+            ),
+            capacities=capacities,
         )
         self.d = self.policy.d
         self.seed = seed

@@ -39,6 +39,29 @@ time, so their enqueue→completion latency includes the redo cost; nothing is
 lost (``completed + shed == m`` always).  ``revive_schedule`` brings a
 replica back with a **cold** cache, so the post-revival hit-rate dip
 measures the cache re-warm cost.
+
+**Heterogeneous replicas** (arXiv 1705.09073): when the scheduler's ledger
+carries ``capacities``, replica r serves at rate ``c_r`` — a request of cost
+c occupies it for ``c / c_r`` wall-clock — and the arrival rate is
+``utilization`` of the *initial live capacity* ``sum(c_r)`` rather than the
+replica count.  The outstanding-imbalance samples are capacity-normalized
+(``load_r / c_r``), so uniform capacities reproduce the homogeneous
+simulator bit-for-bit.  Ledger accounting stays in cost units; only wall
+time and the balance metric rescale.
+
+**Elastic semantics**: an ``Autoscaler`` grows and shrinks the live replica
+pool on a queue-depth signal (outstanding work per unit live capacity, in
+mean-cost units).  It reuses the kill/revive machinery verbatim — scale-down
+is ``on_kill`` (drain + requeue through the policy), scale-up is
+``on_revive`` (cold cache) — and keeps the active set a *contiguous prefix*
+of the replica ids: scale-up revives the lowest dead id, scale-down kills
+the highest live one.  That prefix discipline is the consistent-hash-style
+handoff: a rescale only moves the keys that the policy's own failover chain
+maps onto (or off) the toggled replica, so every other replica's prefix
+cache survives the rescale untouched.  Scale actions are recorded in
+``SimResult.scale_events`` and the drain curve in
+``SimResult.sample_outstanding`` (benchmarks/bench_hetero_elastic.py gates
+the recovery time from these).
 """
 from __future__ import annotations
 
@@ -52,9 +75,48 @@ import numpy as np
 
 from repro.core.metrics import avg_imbalance_fraction, tenant_imbalance_report
 
-__all__ = ["SimResult", "simulate_serving"]
+__all__ = ["Autoscaler", "SimResult", "simulate_serving"]
 
 Schedule = Sequence[Tuple[float, int]]  # (event time, replica id)
+
+
+@dataclasses.dataclass
+class Autoscaler:
+    """Reactive pool autoscaler for simulate_serving.
+
+    Every ``check_every`` arrivals (and at least ``cooldown`` arrivals after
+    the previous action) the signal
+
+        outstanding live work / (live capacity * mean cost)
+
+    — roughly "queued requests per unit replica" — is compared against the
+    ``high``/``low`` watermarks: above ``high`` the lowest dead replica id is
+    revived (cold cache), below ``low`` the highest live id is killed (its
+    pending work drains and requeues through the policy).  The pool stays in
+    [min_replicas, max_replicas]; the run starts with ``initial`` live
+    replicas (default min_replicas), the rest pre-killed.
+    """
+
+    min_replicas: int
+    max_replicas: int
+    initial: Optional[int] = None
+    high: float = 4.0
+    low: float = 0.5
+    check_every: int = 256
+    cooldown: int = 512
+
+    def __post_init__(self):
+        if self.initial is None:
+            self.initial = self.min_replicas
+        if not 1 <= self.min_replicas <= self.initial <= self.max_replicas:
+            raise ValueError(
+                f"need 1 <= min {self.min_replicas} <= initial "
+                f"{self.initial} <= max {self.max_replicas}"
+            )
+        if not self.low < self.high:
+            raise ValueError(f"low {self.low} must be < high {self.high}")
+        if self.check_every < 1 or self.cooldown < 0:
+            raise ValueError("check_every >= 1 and cooldown >= 0 required")
 
 
 @dataclasses.dataclass
@@ -81,8 +143,13 @@ class SimResult:
     shed_mask: np.ndarray       # (m,) bool, True where the request was shed
     requeued: int               # pending requests redistributed off dead replicas
     sample_times: np.ndarray    # outstanding-imbalance sample times (post-warmup)
-    sample_imbalance: np.ndarray  # I(t)/outstanding at those times (live replicas)
+    sample_imbalance: np.ndarray  # I(t)/outstanding at those times (live
+    #   replicas; capacity-normalized loads when the ledger has capacities)
+    sample_outstanding: np.ndarray  # total outstanding work (cost units, live
+    #   replicas) at those times — the queue-drain curve rescales ride on
     tenant_report: Optional[dict] = None
+    scale_events: list = dataclasses.field(default_factory=list)
+    #   (time, +1|-1, replica) per autoscaler action, in order
 
 
 def _percentile(lat: np.ndarray, q: float) -> float:
@@ -104,24 +171,28 @@ def simulate_serving(
     kill_schedule: Optional[Schedule] = None,
     revive_schedule: Optional[Schedule] = None,
     strict_ledger: bool = True,
+    autoscaler: Optional[Autoscaler] = None,
 ) -> SimResult:
     """Drive ``scheduler`` (route/complete/loads) through a request stream.
 
     keys (m,) are session ids; costs (m,) are service times (default 1.0).
     Arrivals are evenly spaced so offered load is ``utilization`` of the
-    aggregate service rate; replicas serve FIFO at unit rate, and every
-    completion with finish time <= the current arrival is delivered via
-    ``scheduler.complete`` before the arrival is routed.  After the last
-    arrival the queue drains fully, so every admitted request completes:
-    ``completed + shed == m`` and a correct scheduler's ledger ends at
-    exactly zero (enforced here when the scheduler carries a LoadLedger —
-    ``strict_ledger`` arms its over-release guard for the run).
+    aggregate service rate; replicas serve FIFO at unit rate (or rate
+    ``c_r`` when the scheduler's ledger carries capacities — see the module
+    docstring), and every completion with finish time <= the current arrival
+    is delivered via ``scheduler.complete`` before the arrival is routed.
+    After the last arrival the queue drains fully, so every admitted request
+    completes: ``completed + shed == m`` and a correct scheduler's ledger
+    ends at exactly zero (enforced here when the scheduler carries a
+    LoadLedger — ``strict_ledger`` arms its over-release guard for the run).
 
     ``queue_bound`` bounds each replica's FIFO (admission control: overflow
     arrivals are shed); ``kill_schedule`` / ``revive_schedule`` are
     (time, replica) sequences driving mid-stream replica failure and revival
     — see the module docstring for the overload and failure semantics.
-    ``utilization >= 1`` without a queue_bound diverges and warns.
+    ``autoscaler`` (an Autoscaler) elastically grows/shrinks the live pool
+    on the same kill/revive machinery.  ``utilization >= 1`` without a
+    queue_bound diverges and warns.
 
     With ``tenants`` given, the result carries a per-tenant SLO report
     (core.metrics.tenant_imbalance_report at threshold ``slo``).
@@ -149,14 +220,39 @@ def simulate_serving(
             stacklevel=2,
         )
     ledger = getattr(scheduler, "ledger", None)
-    if (kill_schedule or revive_schedule) and ledger is None:
+    if (kill_schedule or revive_schedule or autoscaler) and ledger is None:
         raise ValueError(
-            "kill/revive schedules need a LoadLedger-backed scheduler "
-            "(PolicyScheduler) so the live-replica mask reaches the policy"
+            "kill/revive schedules and autoscaling need a LoadLedger-backed "
+            "scheduler (PolicyScheduler) so the live mask reaches the policy"
         )
     if ledger is not None and strict_ledger:
         ledger.strict = True
-    dt = float(costs.mean()) / (utilization * n)
+    capacities = ledger.capacities if ledger is not None else None
+    rates = None if capacities is None else np.asarray(capacities, np.float64)
+    # only positive-rate replicas can ever serve; the autoscaler must not
+    # revive a zero-capacity one (the ledger already masks it dead)
+    eligible = np.ones(n, dtype=bool) if rates is None else rates > 0
+    if autoscaler is not None:
+        if autoscaler.max_replicas > int(eligible.sum()):
+            raise ValueError(
+                f"autoscaler max_replicas {autoscaler.max_replicas} exceeds "
+                f"the {int(eligible.sum())} positive-capacity replicas"
+            )
+        for r in np.flatnonzero(eligible)[autoscaler.initial:]:
+            ledger.kill(int(r))  # pre-killed: nothing pending to drain yet
+    mean_cost = float(costs.mean())
+    # offered load is `utilization` of the INITIAL live service capacity
+    # (replica count when rates are None) — with neither capacities nor an
+    # autoscaler this is exactly the old mean(cost)/(utilization*n) spacing
+    live0 = ledger.live_mask() if ledger is not None else None
+    if live0 is None:
+        agg0 = float(n) if rates is None else float(rates.sum())
+    else:
+        agg0 = (
+            float(live0.sum()) if rates is None
+            else float(rates[live0].sum())
+        )
+    dt = mean_cost / (utilization * agg0)
     if sample_every is None:
         sample_every = max(m // 256, 1)
 
@@ -182,6 +278,9 @@ def simulate_serving(
     fanout: dict[int, set] = {}
     sample_ts: list[float] = []
     samples: list[float] = []
+    samples_out: list[float] = []
+    scale_events: list[tuple] = []
+    last_scale = -1 if autoscaler is None else -autoscaler.cooldown - 1
     peak = 0.0
     completed = 0
     requeued = 0
@@ -197,9 +296,11 @@ def simulate_serving(
 
     def enqueue(idx: int, k: int, c: float, now: float, r: int) -> None:
         start = max(now, float(free_at[r]))
-        free_at[r] = start + c
+        # wall-clock occupancy is cost / service rate; ledger units stay cost
+        dur = c if rates is None else c / float(rates[r])
+        free_at[r] = start + dur
         pending[r].append((idx, k, c))
-        heapq.heappush(heap, (start + c, r, gen[r], c, idx))
+        heapq.heappush(heap, (start + dur, r, gen[r], c, idx))
 
     def on_kill(now: float, r: int) -> None:
         nonlocal requeued, shed, peak
@@ -254,9 +355,31 @@ def simulate_serving(
                 t, kind, r = ctrl.popleft()
                 (on_kill if kind == 0 else on_revive)(t, r)
 
+    def autoscale(i: int, t: float) -> None:
+        nonlocal last_scale
+        a = autoscaler
+        if i % a.check_every or i - last_scale <= a.cooldown:
+            return
+        live = ledger.alive & eligible
+        n_live = int(live.sum())
+        cap_live = float(n_live) if rates is None else float(rates[live].sum())
+        signal = float(scheduler.loads[live].sum()) / (cap_live * mean_cost)
+        if signal > a.high and n_live < a.max_replicas:
+            r = int(np.flatnonzero(~ledger.alive & eligible)[0])
+            on_revive(t, r)  # lowest dead id: active set stays a prefix
+            scale_events.append((t, 1, r))
+            last_scale = i
+        elif signal < a.low and n_live > a.min_replicas:
+            r = int(np.flatnonzero(live)[-1])
+            on_kill(t, r)  # highest live id: drains + requeues its work
+            scale_events.append((t, -1, r))
+            last_scale = i
+
     for i in range(m):
         t = i * dt
         advance(t)
+        if autoscaler is not None:
+            autoscale(i, t)
         k = int(keys[i])
         c = float(costs[i])
         arrival[i] = t
@@ -279,15 +402,24 @@ def simulate_serving(
             peak = max(peak, float(scheduler.loads[r]))
         if i % sample_every == 0:
             ld = scheduler.loads
-            alive = ledger.alive if ledger is not None else None
-            if alive is not None and not alive.all():
-                ld = ld[alive]  # dead replicas are capacity, not headroom
+            rt = rates
+            live = ledger.live_mask() if ledger is not None else None
+            if live is not None and not live.all():
+                ld = ld[live]  # dead replicas are capacity, not headroom
+                rt = None if rates is None else rates[live]
             # skip the warmup prefix: with < n requests ever routed the
             # fraction is ~(1 - 1/n) for ANY policy (one outstanding request
             # is "imbalanced" by construction), a measurement artifact that
             # would bias well-balanced policies' reported values.
             if i >= n:
+                out_total = float(ld.sum())
+                if rt is not None:
+                    # capacity-normalized balance (arXiv 1705.09073); the
+                    # relative fraction is scale-invariant, so uniform
+                    # capacities reproduce the unweighted samples exactly
+                    ld = ld / rt
                 sample_ts.append(t)
+                samples_out.append(out_total)
                 samples.append(
                     (float(ld.max()) - float(ld.mean()))
                     / max(float(ld.sum()), 1.0)
@@ -331,5 +463,7 @@ def simulate_serving(
         requeued=requeued,
         sample_times=np.asarray(sample_ts, dtype=np.float64),
         sample_imbalance=np.asarray(samples, dtype=np.float64),
+        sample_outstanding=np.asarray(samples_out, dtype=np.float64),
         tenant_report=report,
+        scale_events=scale_events,
     )

@@ -1,0 +1,127 @@
+"""Docs stay executable: run fenced snippets and check relative links.
+
+CI's docs job runs this over README.md and docs/*.md (and DESIGN.md for
+link-checking). Two guarantees:
+
+1. **Snippets run.** Every fenced ```python or ```bash block is executed
+   (python via a subprocess with PYTHONPATH=src:., bash via `bash -euo
+   pipefail`) under REPRO_SMOKE=1, so a doc snippet that drifts from the
+   API fails the build instead of lying to the reader. Blocks whose info
+   string carries `no-run` (e.g. ```bash no-run) are skipped — use it for
+   illustrative fragments and commands too slow or environment-bound for
+   CI (installs, full bench runs); everything else must execute.
+2. **Relative links resolve.** Every `[text](target)` whose target is not
+   an absolute URL or a bare anchor must exist on disk relative to the doc
+   (anchors on existing files are accepted without heading validation).
+
+Usage: python tools/check_docs.py [files...]   (defaults to README.md,
+DESIGN.md, docs/*.md; exits non-zero listing every failure).
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+FENCE_RE = re.compile(r"^```(\S*)[ \t]*([^\n]*)$")
+# [text](target) — skips image links' inner ! only in that it doesn't matter
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def extract_blocks(text: str):
+    """Yield (lang, info, first_line_no, body) for every fenced block."""
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE_RE.match(lines[i])
+        if m and m.group(1) != "":
+            lang, info = m.group(1).lower(), m.group(2)
+            body, start = [], i + 1
+            i += 1
+            while i < len(lines) and lines[i].rstrip() != "```":
+                body.append(lines[i])
+                i += 1
+            yield lang, info, start + 1, "\n".join(body)
+        i += 1
+
+
+def run_block(lang: str, body: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ, REPRO_SMOKE="1", JAX_PLATFORMS="cpu")
+    env["PYTHONPATH"] = f"src:.:{env.get('PYTHONPATH', '')}"
+    suffix = ".py" if lang == "python" else ".sh"
+    with tempfile.NamedTemporaryFile(
+        "w", suffix=suffix, dir=ROOT, delete=False
+    ) as f:
+        f.write(body + "\n")
+        path = f.name
+    try:
+        cmd = (
+            [sys.executable, path] if lang == "python"
+            else ["bash", "-euo", "pipefail", path]
+        )
+        return subprocess.run(
+            cmd, cwd=ROOT, env=env, capture_output=True, text=True,
+            timeout=600,
+        )
+    finally:
+        os.unlink(path)
+
+
+def check_links(doc: Path, text: str) -> list[str]:
+    errors = []
+    for target in LINK_RE.findall(text):
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target) or target.startswith("#"):
+            continue  # URL scheme or in-page anchor
+        rel = target.split("#", 1)[0]
+        if not (doc.parent / rel).exists():
+            errors.append(f"{doc}: broken relative link -> {target}")
+    return errors
+
+
+def check_doc(doc: Path) -> list[str]:
+    text = doc.read_text()
+    errors = check_links(doc, text)
+    for lang, info, line, body in extract_blocks(text):
+        if lang not in ("python", "bash", "sh"):
+            continue
+        if "no-run" in info.split():
+            continue
+        lang = "bash" if lang == "sh" else lang
+        print(f"  running {doc}:{line} ({lang}, {len(body.splitlines())} "
+              "lines)", flush=True)
+        proc = run_block(lang, body)
+        if proc.returncode != 0:
+            errors.append(
+                f"{doc}:{line}: {lang} snippet failed "
+                f"(exit {proc.returncode})\n"
+                f"--- stdout ---\n{proc.stdout}\n"
+                f"--- stderr ---\n{proc.stderr}"
+            )
+    return errors
+
+
+def main(argv=None) -> int:
+    args = (argv if argv is not None else sys.argv[1:])
+    docs = (
+        [Path(a) for a in args] if args
+        else [ROOT / "README.md", ROOT / "DESIGN.md",
+              *sorted((ROOT / "docs").glob("*.md"))]
+    )
+    errors = []
+    for doc in docs:
+        print(f"checking {doc}", flush=True)
+        errors.extend(check_doc(doc))
+    for e in errors:
+        print(f"FAIL: {e}")
+    if not errors:
+        print(f"{len(docs)} doc(s) clean: snippets run, links resolve")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
