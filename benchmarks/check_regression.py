@@ -55,6 +55,12 @@ GATED_METRICS = {
     "rel_throughput": ("down", "rel_throughput/"),
     "keys_per_sec": ("down", "keys_per_sec/"),
     "scaling_efficiency": ("down", "scaling_efficiency/"),
+    # chunked streaming engine (bench_trace_scale): relative chunked/one-shot
+    # throughput, chunked/one-shot RSS growth, and carried state bytes per
+    # distinct key — the flat-memory contract, gated
+    "events_per_sec": ("down", "events_per_sec/"),
+    "rss_ratio": ("up", "rss_ratio/"),
+    "bytes_per_key": ("up", "bytes_per_key/"),
 }
 
 

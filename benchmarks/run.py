@@ -44,6 +44,7 @@ from benchmarks import (
     bench_storm_sim,
     bench_table2,
     bench_theory,
+    bench_trace_scale,
 )
 from benchmarks.common import bench_main
 
@@ -68,6 +69,7 @@ MODULES = [
     ("failover_serving", bench_failover_serving),
     ("hetero_elastic", bench_hetero_elastic),
     ("sharded_router", bench_sharded_router),
+    ("trace_scale", bench_trace_scale),
 ]
 
 # The canonical CI quick-bench list: every JSON bench check_regression.py
@@ -82,6 +84,7 @@ CI_SET = [
     ("failover_serving", bench_failover_serving),
     ("hetero_elastic", bench_hetero_elastic),
     ("sharded_router", bench_sharded_router),
+    ("trace_scale", bench_trace_scale),
 ]
 
 

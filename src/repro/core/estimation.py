@@ -55,6 +55,7 @@ __all__ = [
     "online_ss_decay",
     "online_ss_estimate",
     "online_ss_from_tracker",
+    "online_ss_head_table",
     "online_head_tables",
 ]
 
@@ -453,6 +454,37 @@ def online_ss_from_tracker(tracker: SpaceSavingTracker, capacity: int) -> Online
     )
 
 
+def online_ss_head_table(
+    state: OnlineSS,
+    n_workers: int,
+    d: int = 2,
+    d_max: int = 16,
+    theta: Optional[float] = None,
+    slack: float = 2.0,
+    min_count: int = 8,
+    any_worker: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Emit one (tbl_keys, tbl_ncand) head table from a summary state.
+
+    THE shared emit: `online_head_tables` calls this once per block and the
+    chunked driver (parallel.chunked_driver) calls it from inside its carried
+    scan, so both paths derive candidate counts from identical arithmetic —
+    canonical head_test predicate, integer-exact adaptive_d_counts, and
+    W_SENTINEL head slots under `any_worker`.  Slot ncand is d(k) for head
+    slots and `d` otherwise (lookup miss == tail hit == plain PKG).
+    """
+    theta_f = head_threshold(n_workers, d) if theta is None else float(theta)
+    is_head = head_test(state.counts, state.total, theta_f, min_count)
+    if any_worker:
+        head_nc = jnp.full_like(state.counts, jnp.int32(W_SENTINEL))
+    else:
+        head_nc = adaptive_d_counts(
+            state.counts, state.total, n_workers,
+            d_base=d, d_max=d_max, slack=slack,
+        )
+    return state.keys, jnp.where(is_head, head_nc, d).astype(jnp.int32)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
@@ -488,22 +520,16 @@ def online_head_tables(
     global-argmin path — consume such tables with the router's w_mode=True
     (DESIGN.md SS3.3).
     """
-    theta_f = head_threshold(n_workers, d) if theta is None else float(theta)
     N = keys.shape[0]
     assert N % block == 0, (N, block)
     kb = keys.astype(jnp.int32).reshape(N // block, block)
     t_idx = jnp.arange(N // block, dtype=jnp.int32)
 
     def emit(state: OnlineSS):
-        is_head = head_test(state.counts, state.total, theta_f, min_count)
-        if any_worker:
-            head_nc = jnp.full_like(state.counts, jnp.int32(W_SENTINEL))
-        else:
-            head_nc = adaptive_d_counts(
-                state.counts, state.total, n_workers,
-                d_base=d, d_max=d_max, slack=slack,
-            )
-        return state.keys, jnp.where(is_head, head_nc, d).astype(jnp.int32)
+        return online_ss_head_table(
+            state, n_workers, d=d, d_max=d_max, theta=theta,
+            slack=slack, min_count=min_count, any_worker=any_worker,
+        )
 
     def step(state, inp):
         blk, b = inp

@@ -71,6 +71,9 @@ __all__ = [
     "pkg_sharded_partition",
     "d_choices_sharded_partition",
     "w_choices_sharded_partition",
+    "pkg_chunked_partition",
+    "d_choices_chunked_partition",
+    "w_choices_chunked_partition",
     "PARTITIONERS",
 ]
 
@@ -891,6 +894,93 @@ def w_choices_sharded_partition(
     )
 
 
+# ---------------------------------------------------------------------------
+# Chunked streaming variants (parallel/chunked_driver.py): the same route
+# core driven chunk-at-a-time with a persistent (loads, Space-Saving) carry —
+# flat memory in stream length, bit-exact to the one-shot kernels for every
+# chunk size.  The adaptive variants share the online estimation machinery
+# (online_ss_head_table emit, per-block stale tables as in
+# estimation.online_head_tables) rather than any offline pre-pass: a chunked
+# run must not require seeing the stream twice.
+# ---------------------------------------------------------------------------
+
+
+def pkg_chunked_partition(
+    keys,
+    n_workers: int,
+    d: int = 2,
+    seed: int = 0,
+    chunk: int = 8192,
+    block: int = 128,
+    capacities=None,
+) -> jnp.ndarray:
+    """PKG routed chunk-at-a-time: bit-exact to pkg_route(chunk=N) at the
+    same block size, with O(chunk) peak memory however long the stream.
+    `keys` may be an array or an iterator of array chunks."""
+    from repro.parallel.chunked_driver import ChunkedRouter  # parallel on core
+
+    router = ChunkedRouter(
+        n_workers, "pkg", d=d, chunk=chunk, block=block, seed=seed,
+        capacities=capacities,
+    )
+    return jnp.asarray(router.route_stream(keys))
+
+
+def d_choices_chunked_partition(
+    keys,
+    n_workers: int,
+    d: int = 2,
+    d_max: int = 8,
+    seed: int = 0,
+    theta: Optional[float] = None,
+    capacity: int = 256,
+    slack: float = 2.0,
+    min_count: int = 8,
+    decay_period: int = 0,
+    chunk: int = 8192,
+    block: int = 128,
+    capacities=None,
+) -> jnp.ndarray:
+    """Online D-Choices routed chunk-at-a-time: the Space-Saving summary
+    rides in the chunk-step carry and head tables are emitted per vector
+    block (stale by <= block messages) — bit-exact to online_head_tables +
+    adaptive_route_online over the whole stream, for every chunk size."""
+    from repro.parallel.chunked_driver import ChunkedRouter  # parallel on core
+
+    router = ChunkedRouter(
+        n_workers, "d_choices", d=d, d_max=d_max, chunk=chunk, block=block,
+        seed=seed, capacities=capacities, ss_capacity=capacity, theta=theta,
+        slack=slack, min_count=min_count, decay_period=decay_period,
+    )
+    return jnp.asarray(router.route_stream(keys))
+
+
+def w_choices_chunked_partition(
+    keys,
+    n_workers: int,
+    d: int = 2,
+    seed: int = 0,
+    theta: Optional[float] = None,
+    capacity: int = 256,
+    min_count: int = 8,
+    decay_period: int = 0,
+    chunk: int = 8192,
+    block: int = 128,
+    capacities=None,
+) -> jnp.ndarray:
+    """Online W-Choices routed chunk-at-a-time: per-block any-worker head
+    tables (W_SENTINEL) from the carried summary, head keys to the
+    water-fill global argmin — bit-exact to the one-shot w-mode scan."""
+    from repro.parallel.chunked_driver import ChunkedRouter  # parallel on core
+
+    router = ChunkedRouter(
+        n_workers, "w_choices", d=d, chunk=chunk, block=block, seed=seed,
+        capacities=capacities, ss_capacity=capacity, theta=theta,
+        min_count=min_count, decay_period=decay_period,
+    )
+    return jnp.asarray(router.route_stream(keys))
+
+
 PARTITIONERS = {
     "kg": hash_partition,
     "sg": shuffle_partition,
@@ -908,4 +998,7 @@ PARTITIONERS = {
     "pkg_sharded": pkg_sharded_partition,
     "d_choices_sharded": d_choices_sharded_partition,
     "w_choices_sharded": w_choices_sharded_partition,
+    "pkg_chunked": pkg_chunked_partition,
+    "d_choices_chunked": d_choices_chunked_partition,
+    "w_choices_chunked": w_choices_chunked_partition,
 }

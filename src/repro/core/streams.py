@@ -24,6 +24,7 @@ __all__ = [
     "multi_tenant_stream",
     "graph_edge_stream",
     "uniform_stream",
+    "stream_chunks",
     "StreamSpec",
     "PAPER_DATASETS",
     "ScaleScenario",
@@ -40,12 +41,42 @@ def zipf_probs(n_keys: int, z: float) -> np.ndarray:
     return w / w.sum()
 
 
+# Uniform draws per slice of a sampling pass.  Bounded so a 1e8-event stream
+# never materializes the float64 uniforms (or an int64 searchsorted result)
+# for the whole stream at once; numpy's Generator fills sequentially, so any
+# chunking of rng.random calls yields the same draw sequence — chunked
+# sampling is bit-identical to one-shot for every chunk size.
+_SAMPLE_CHUNK = 1 << 20
+
+
 def _sample_from_probs(probs: np.ndarray, n_msgs: int, rng: np.random.Generator) -> np.ndarray:
-    """Inverse-CDF sampling; keys are ranks ordered by decreasing probability."""
+    """Inverse-CDF sampling; keys are ranks ordered by decreasing probability.
+
+    Samples in _SAMPLE_CHUNK-bounded slices straight into the int32 output:
+    peak transient memory is O(_SAMPLE_CHUNK) on top of the result, instead
+    of the 3x-of-stream float64 u + int64 indices + int32 astype copy the
+    one-shot version allocated.
+    """
     cdf = np.cumsum(probs)
     cdf[-1] = 1.0
-    u = rng.random(n_msgs)
-    return np.searchsorted(cdf, u, side="right").astype(np.int32)
+    out = np.empty(n_msgs, dtype=np.int32)
+    for lo in range(0, n_msgs, _SAMPLE_CHUNK):
+        hi = min(lo + _SAMPLE_CHUNK, n_msgs)
+        out[lo:hi] = np.searchsorted(cdf, rng.random(hi - lo), side="right")
+    return out
+
+
+def _sampled_chunks(probs, n_msgs: int, rng: np.random.Generator, chunk: int):
+    """Yield _sample_from_probs(probs, n_msgs, rng) in `chunk`-sized pieces.
+
+    Bit-identical to the one-shot call under concatenation (see
+    _SAMPLE_CHUNK note), with O(chunk) live memory — the flat-RSS ingestion
+    primitive behind stream_chunks()."""
+    cdf = np.cumsum(probs)
+    cdf[-1] = 1.0
+    for lo in range(0, n_msgs, chunk):
+        n = min(chunk, n_msgs - lo)
+        yield np.searchsorted(cdf, rng.random(n), side="right").astype(np.int32)
 
 
 def zipf_stream(n_msgs: int, n_keys: int, z: float, seed: int = 0) -> np.ndarray:
@@ -271,6 +302,24 @@ class StreamSpec:
         assert self.mu is not None and self.sigma is not None
         return lognormal_stream(m, self.n_keys, self.mu, self.sigma, seed=seed)
 
+    def stream_chunks(self, chunk: int, seed: int = 0, scale: float = 1.0):
+        """Yield generate(seed, scale) in `chunk`-sized int32 pieces with
+        O(n_keys + chunk) live memory — the pmf is computed once, then the
+        stream is sampled lazily.  Concatenating the chunks is bit-identical
+        to generate() for every chunk size (same rng draw order)."""
+        m = max(int(self.n_msgs * scale), 1000)
+        rng = np.random.default_rng(seed)
+        if self.p1 is not None:
+            probs = zipf_probs(self.n_keys, _solve_zipf_for_p1(self.n_keys, self.p1))
+        elif self.z is not None:
+            probs = zipf_probs(self.n_keys, self.z)
+        else:
+            assert self.mu is not None and self.sigma is not None
+            pops = rng.lognormal(mean=self.mu, sigma=self.sigma, size=self.n_keys)
+            pops = np.sort(pops)[::-1]
+            probs = pops / pops.sum()
+        yield from _sampled_chunks(probs, m, rng, chunk)
+
 
 @dataclasses.dataclass(frozen=True)
 class ScaleScenario:
@@ -290,6 +339,12 @@ class ScaleScenario:
     def generate(self, seed: int = 0, scale: float = 1.0) -> np.ndarray:
         m = max(int(self.n_msgs * scale), 1000)
         return zipf_stream(m, self.n_keys, self.z, seed=seed)
+
+    def stream_chunks(self, chunk: int, seed: int = 0, scale: float = 1.0):
+        """Flat-memory chunk iterator, bit-identical to generate() joined."""
+        m = max(int(self.n_msgs * scale), 1000)
+        rng = np.random.default_rng(seed)
+        yield from _sampled_chunks(zipf_probs(self.n_keys, self.z), m, rng, chunk)
 
     def head_fraction(self) -> float:
         """p1 of the scenario's Zipf pmf — compare against d/W balanceability."""
@@ -352,6 +407,24 @@ class DriftScenario:
             )
             return keys
         raise ValueError(self.kind)
+
+    def stream_chunks(self, chunk: int, seed: int = 0, scale: float = 1.0):
+        """Chunk iterator over generate().  Drift streams carry stateful
+        rank->key mappings, so this materializes the stream once and yields
+        views — same ingestion API, but NOT flat-memory (use StreamSpec /
+        ScaleScenario scenarios for the 1e8-event flat-RSS runs)."""
+        keys = self.generate(seed=seed, scale=scale)
+        for lo in range(0, len(keys), chunk):
+            yield keys[lo : lo + chunk]
+
+
+def stream_chunks(spec, chunk: int, seed: int = 0, scale: float = 1.0):
+    """One ingestion path for benches and the chunked driver: yield the
+    spec's stream as int32 chunks.  Dispatches to the spec's own
+    stream_chunks (StreamSpec / ScaleScenario are flat-memory; DriftScenario
+    materializes once); concatenation is bit-identical to spec.generate().
+    """
+    yield from spec.stream_chunks(chunk, seed=seed, scale=scale)
 
 
 # Drift-rate sweep at W=100 (the PKG-hard regime) + structural variants; the

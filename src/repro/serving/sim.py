@@ -122,7 +122,16 @@ class Autoscaler:
 @dataclasses.dataclass
 class SimResult:
     """Everything the benches and demos report (assign/hit/latency/shed are
-    per-request arrays, the rest scalar summaries)."""
+    per-request arrays, the rest scalar summaries).
+
+    **Streaming mode** (simulate_serving fed a chunk iterator): the
+    per-request arrays are not materialized — ``assign``/``hit``/
+    ``shed_mask`` come back empty, ``latency`` holds the (reservoir-bounded)
+    completed-request latencies the percentiles were computed from, and
+    ``assign_imbalance`` is the checkpointed online estimate.  All scalar
+    aggregates (hit_rate, completed, shed, makespan, peak, percentiles at
+    reservoir scale) match the array-mode run exactly; ``assign_hist`` (the
+    final per-replica request histogram) is filled in both modes."""
 
     assign: np.ndarray          # (m,) replica per request (final, post-requeue)
     hit: np.ndarray             # (m,) bool prefix-cache hit at admission
@@ -150,6 +159,8 @@ class SimResult:
     tenant_report: Optional[dict] = None
     scale_events: list = dataclasses.field(default_factory=list)
     #   (time, +1|-1, replica) per autoscaler action, in order
+    assign_hist: Optional[np.ndarray] = None
+    #   (n,) int64 final routed-request histogram (post-requeue), both modes
 
 
 def _percentile(lat: np.ndarray, q: float) -> float:
@@ -196,16 +207,44 @@ def simulate_serving(
 
     With ``tenants`` given, the result carries a per-tenant SLO report
     (core.metrics.tenant_imbalance_report at threshold ``slo``).
+
+    **Streaming mode**: ``keys`` may instead be an *iterator of int chunks*
+    (anything without ``len()`` — core.traces readers, ChunkedRouter feeds,
+    core.streams.stream_chunks).  The simulator then runs with O(distinct
+    keys + outstanding) memory instead of O(events): per-request arrays are
+    not materialized (see SimResult), costs/tenants must be None (unit
+    costs), ``sample_every`` defaults to 4096 (the stream length is unknown
+    up front), and ``assign_imbalance`` is the mean of checkpointed online
+    imbalance fractions rather than the retrospective prefix series.  Every
+    scalar aggregate — hit_rate, completed, shed, requeued, makespan, peak,
+    final histogram, latency percentiles while completions fit the 65536
+    reservoir — is identical to feeding the same events as one array.
     """
-    keys = np.asarray(keys).reshape(-1)
-    m = len(keys)
+    streaming = not hasattr(keys, "__len__")
     n = len(scheduler.loads)
-    if costs is None:
-        costs = np.ones(m, dtype=np.float64)
+    if streaming:
+        if costs is not None:
+            raise ValueError(
+                "streaming keys (chunk iterator) require costs=None: "
+                "per-request costs would need a second aligned stream"
+            )
+        if tenants is not None:
+            raise ValueError(
+                "streaming keys (chunk iterator) require tenants=None: the "
+                "SLO report needs the materialized assignment"
+            )
+        chunk_iter = keys
+        m = None  # unknown until the stream is drained
     else:
-        costs = np.asarray(costs, dtype=np.float64).reshape(-1)
-        if len(costs) != m:
-            raise ValueError(f"costs length {len(costs)} != {m}")
+        keys = np.asarray(keys).reshape(-1)
+        m = len(keys)
+        chunk_iter = (keys,)
+        if costs is None:
+            costs = np.ones(m, dtype=np.float64)
+        else:
+            costs = np.asarray(costs, dtype=np.float64).reshape(-1)
+            if len(costs) != m:
+                raise ValueError(f"costs length {len(costs)} != {m}")
     if not 0.0 < utilization:
         raise ValueError(f"utilization must be positive, got {utilization}")
     if queue_bound is not None and queue_bound < 1:
@@ -240,7 +279,7 @@ def simulate_serving(
             )
         for r in np.flatnonzero(eligible)[autoscaler.initial:]:
             ledger.kill(int(r))  # pre-killed: nothing pending to drain yet
-    mean_cost = float(costs.mean())
+    mean_cost = 1.0 if streaming else float(costs.mean())
     # offered load is `utilization` of the INITIAL live service capacity
     # (replica count when rates are None) — with neither capacities nor an
     # autoscaler this is exactly the old mean(cost)/(utilization*n) spacing
@@ -254,7 +293,8 @@ def simulate_serving(
         )
     dt = mean_cost / (utilization * agg0)
     if sample_every is None:
-        sample_every = max(m // 256, 1)
+        # streaming: m is unknown up front, so use a fixed cadence
+        sample_every = 4096 if streaming else max(m // 256, 1)
 
     # control events: (time, kind, replica); kills sort before revives at
     # equal times so a kill+revive pair at t is a cache wipe, not a no-op
@@ -264,18 +304,36 @@ def simulate_serving(
     ))
 
     # heap entries carry a per-replica generation; a kill bumps gen[r] so
-    # the dead replica's in-flight completions are invalidated in O(1)
-    heap: list[tuple[float, int, int, float, int]] = []  # (fin, r, gen, cost, idx)
+    # the dead replica's in-flight completions are invalidated in O(1);
+    # arrival rides last in the tuple so requeues keep their original time
+    # without an O(m) arrival array
+    heap: list[tuple[float, int, int, float, int, float]] = []
+    #   (fin, r, gen, cost, idx, arrival)
     gen = [0] * n
-    pending: list[deque] = [deque() for _ in range(n)]  # (idx, key, cost) FIFO
+    pending: list[deque] = [deque() for _ in range(n)]  # (idx, key, cost, arr)
     free_at = np.zeros(n, dtype=np.float64)
     caches = [OrderedDict() for _ in range(n)]
-    assign = np.empty(m, dtype=np.int32)
-    hit = np.zeros(m, dtype=bool)
-    shed_mask = np.zeros(m, dtype=bool)
-    arrival = np.zeros(m, dtype=np.float64)
-    latency = np.full(m, np.nan, dtype=np.float64)
-    fanout: dict[int, set] = {}
+    if streaming:
+        assign = hit = shed_mask = latency = None
+    else:
+        assign = np.empty(m, dtype=np.int32)
+        hit = np.zeros(m, dtype=bool)
+        shed_mask = np.zeros(m, dtype=bool)
+        latency = np.full(m, np.nan, dtype=np.float64)
+    hist = np.zeros(n, dtype=np.int64)  # routed-request counts, post-requeue
+    hit_count = 0
+    # completed-latency reservoir (streaming): exact multiset while the run
+    # fits, uniform sample (algorithm R, fixed seed) beyond — so percentiles
+    # at differential-test scale match array mode exactly
+    lat_cap = 1 << 16
+    lat_res: list[float] = []
+    lat_seen = 0
+    lat_rng = np.random.default_rng(0x13D7) if streaming else None
+    hist_samples: list[float] = []  # online I(t)/t checkpoints (streaming)
+    # session fanout as per-key replica bitmasks (arbitrary-precision ints):
+    # same max-popcount metric as the old dict-of-sets at a fraction of the
+    # per-key footprint, which is what bounds streaming RSS at 1e6+ keys
+    fanout: dict[int, int] = {}
     sample_ts: list[float] = []
     samples: list[float] = []
     samples_out: list[float] = []
@@ -294,13 +352,13 @@ def simulate_serving(
         if len(cache) > cache_capacity:
             cache.popitem(last=False)
 
-    def enqueue(idx: int, k: int, c: float, now: float, r: int) -> None:
+    def enqueue(idx: int, k: int, c: float, now: float, r: int, arr: float) -> None:
         start = max(now, float(free_at[r]))
         # wall-clock occupancy is cost / service rate; ledger units stay cost
         dur = c if rates is None else c / float(rates[r])
         free_at[r] = start + dur
-        pending[r].append((idx, k, c))
-        heapq.heappush(heap, (start + dur, r, gen[r], c, idx))
+        pending[r].append((idx, k, c, arr))
+        heapq.heappush(heap, (start + dur, r, gen[r], c, idx, arr))
 
     def on_kill(now: float, r: int) -> None:
         nonlocal requeued, shed, peak
@@ -310,22 +368,26 @@ def simulate_serving(
         victims = list(pending[r])
         pending[r].clear()
         free_at[r] = now
-        for idx, k, c in victims:
+        for idx, k, c, arr in victims:
             # the work was never completed: release it from the dead replica
             # and push it back through the policy, which re-decides under
             # the live mask (train/failover.py's drain-and-redistribute)
             ledger.release(r, c)
             r2 = scheduler.route(k, c)
             requeued += 1
-            assign[idx] = r2
-            fanout.setdefault(k, set()).add(int(r2))
+            hist[r] -= 1
+            hist[r2] += 1
+            if not streaming:
+                assign[idx] = r2
+            fanout[k] = fanout.get(k, 0) | (1 << int(r2))
             if queue_bound is not None and len(pending[r2]) >= queue_bound:
                 scheduler.complete(r2, c)  # backpressure: overflow is shed
-                shed_mask[idx] = True
+                if not streaming:
+                    shed_mask[idx] = True
                 shed += 1
                 continue
             cache_insert(r2, k)  # the retry's service warms the new replica
-            enqueue(idx, k, c, now, r2)
+            enqueue(idx, k, c, now, r2, arr)
             peak = max(peak, float(scheduler.loads[r2]))
 
     def on_revive(now: float, r: int) -> None:
@@ -336,20 +398,29 @@ def simulate_serving(
         """Deliver completions and fire control events with time <= now, in
         global time order (a kill must not requeue work that finished
         before it)."""
-        nonlocal completed, makespan
+        nonlocal completed, makespan, lat_seen
         while heap or ctrl:
             t_fin = heap[0][0] if heap else np.inf
             t_ctl = ctrl[0][0] if ctrl else np.inf
             if min(t_fin, t_ctl) > now:
                 return
             if t_fin <= t_ctl:
-                fin, r, g, c, idx = heapq.heappop(heap)
+                fin, r, g, c, idx, arr = heapq.heappop(heap)
                 if g != gen[r]:
                     continue  # completion of a since-killed replica
                 scheduler.complete(r, c)
                 completed += 1
                 makespan = max(makespan, fin)
-                latency[idx] = fin - arrival[idx]
+                if streaming:
+                    if len(lat_res) < lat_cap:
+                        lat_res.append(fin - arr)
+                    else:
+                        j = int(lat_rng.integers(0, lat_seen + 1))
+                        if j < lat_cap:
+                            lat_res[j] = fin - arr
+                    lat_seen += 1
+                else:
+                    latency[idx] = fin - arr
                 pending[r].popleft()  # heap order == per-replica FIFO order
             else:
                 t, kind, r = ctrl.popleft()
@@ -375,55 +446,74 @@ def simulate_serving(
             scale_events.append((t, -1, r))
             last_scale = i
 
-    for i in range(m):
-        t = i * dt
-        advance(t)
-        if autoscaler is not None:
-            autoscale(i, t)
-        k = int(keys[i])
-        c = float(costs[i])
-        arrival[i] = t
-        r = scheduler.route(k, c)
-        assign[i] = r
-        if queue_bound is not None and len(pending[r]) >= queue_bound:
-            # queue-based load leveling: the replica's bound is hit, shed the
-            # request (ledger sees acquire+release, so loads stay truthful)
-            scheduler.complete(r, c)
-            shed_mask[i] = True
-            shed += 1
-        else:
-            if k in caches[r]:
-                hit[i] = True
-            cache_insert(r, k)
-            enqueue(i, k, c, t, r)
-            fanout.setdefault(k, set()).add(int(r))
-            # only replica r's load grew this arrival, so tracking it keeps
-            # the true all-time peak at O(1) per request
-            peak = max(peak, float(scheduler.loads[r]))
-        if i % sample_every == 0:
-            ld = scheduler.loads
-            rt = rates
-            live = ledger.live_mask() if ledger is not None else None
-            if live is not None and not live.all():
-                ld = ld[live]  # dead replicas are capacity, not headroom
-                rt = None if rates is None else rates[live]
-            # skip the warmup prefix: with < n requests ever routed the
-            # fraction is ~(1 - 1/n) for ANY policy (one outstanding request
-            # is "imbalanced" by construction), a measurement artifact that
-            # would bias well-balanced policies' reported values.
-            if i >= n:
-                out_total = float(ld.sum())
-                if rt is not None:
-                    # capacity-normalized balance (arXiv 1705.09073); the
-                    # relative fraction is scale-invariant, so uniform
-                    # capacities reproduce the unweighted samples exactly
-                    ld = ld / rt
-                sample_ts.append(t)
-                samples_out.append(out_total)
-                samples.append(
-                    (float(ld.max()) - float(ld.mean()))
-                    / max(float(ld.sum()), 1.0)
-                )
+    i = -1
+    for chunk_keys in chunk_iter:
+        chunk_keys = np.asarray(chunk_keys).reshape(-1)
+        for kv in chunk_keys:
+            i += 1
+            t = i * dt
+            advance(t)
+            if autoscaler is not None:
+                autoscale(i, t)
+            k = int(kv)
+            c = 1.0 if streaming else float(costs[i])
+            r = scheduler.route(k, c)
+            hist[r] += 1
+            if not streaming:
+                assign[i] = r
+            if queue_bound is not None and len(pending[r]) >= queue_bound:
+                # queue-based load leveling: the replica's bound is hit, shed
+                # the request (ledger sees acquire+release, loads stay
+                # truthful)
+                scheduler.complete(r, c)
+                if not streaming:
+                    shed_mask[i] = True
+                shed += 1
+            else:
+                if k in caches[r]:
+                    hit_count += 1
+                    if not streaming:
+                        hit[i] = True
+                cache_insert(r, k)
+                enqueue(i, k, c, t, r, t)
+                fanout[k] = fanout.get(k, 0) | (1 << int(r))
+                # only replica r's load grew this arrival, so tracking it
+                # keeps the true all-time peak at O(1) per request
+                peak = max(peak, float(scheduler.loads[r]))
+            if i % sample_every == 0:
+                if streaming and i:
+                    # online routed-balance checkpoint: I(t) of the live
+                    # histogram (requeues already folded in); dividing the
+                    # mean by final m below mirrors avg_imbalance_fraction,
+                    # just with online checkpoints instead of the
+                    # retrospective prefix series
+                    hist_samples.append(float(hist.max() - hist.mean()))
+                ld = scheduler.loads
+                rt = rates
+                live = ledger.live_mask() if ledger is not None else None
+                if live is not None and not live.all():
+                    ld = ld[live]  # dead replicas are capacity, not headroom
+                    rt = None if rates is None else rates[live]
+                # skip the warmup prefix: with < n requests ever routed the
+                # fraction is ~(1 - 1/n) for ANY policy (one outstanding
+                # request is "imbalanced" by construction), a measurement
+                # artifact that would bias well-balanced policies' reported
+                # values.
+                if i >= n:
+                    out_total = float(ld.sum())
+                    if rt is not None:
+                        # capacity-normalized balance (arXiv 1705.09073);
+                        # the relative fraction is scale-invariant, so
+                        # uniform capacities reproduce the unweighted
+                        # samples exactly
+                        ld = ld / rt
+                    sample_ts.append(t)
+                    samples_out.append(out_total)
+                    samples.append(
+                        (float(ld.max()) - float(ld.mean()))
+                        / max(float(ld.sum()), 1.0)
+                    )
+    m = i + 1  # streaming: now known; array mode: unchanged
 
     advance(np.inf)  # drain: everything admitted eventually completes
 
@@ -435,7 +525,21 @@ def simulate_serving(
                 "acquire/release accounting lost a completion"
             )
 
-    done = latency[~np.isnan(latency)]
+    if streaming:
+        done = np.asarray(sorted(lat_res), dtype=np.float64)
+        latency = done
+        assign = np.empty(0, dtype=np.int32)
+        hit = np.zeros(0, dtype=bool)
+        shed_mask = np.zeros(0, dtype=bool)
+        # online checkpointed estimate of the paper's Mean_t I(t)/m; array
+        # mode keeps the exact retrospective series for bit-compatibility
+        assign_imb = (
+            float(np.mean(hist_samples)) / m if hist_samples
+            else (float(hist.max() - hist.mean()) / m if m else 0.0)
+        )
+    else:
+        done = latency[~np.isnan(latency)]
+        assign_imb = avg_imbalance_fraction(assign, n) if m else 0.0
     report = None
     if tenants is not None:
         report = tenant_imbalance_report(
@@ -444,14 +548,16 @@ def simulate_serving(
     return SimResult(
         assign=assign,
         hit=hit,
-        hit_rate=float(hit.mean()) if m else 0.0,
-        assign_imbalance=avg_imbalance_fraction(assign, n) if m else 0.0,
+        hit_rate=(hit_count / m) if m else 0.0,
+        assign_imbalance=assign_imb,
         # nan, not 0.0: a run too short to produce post-warmup samples must
         # not masquerade as perfect balance
         outstanding_imbalance=float(np.mean(samples)) if samples
         else float("nan"),
         peak_outstanding=peak,
-        session_fanout_max=max((len(v) for v in fanout.values()), default=0),
+        session_fanout_max=max(
+            (bin(v).count("1") for v in fanout.values()), default=0
+        ),
         completed=completed,
         makespan=makespan,
         latency=latency,
@@ -466,4 +572,5 @@ def simulate_serving(
         sample_outstanding=np.asarray(samples_out, dtype=np.float64),
         tenant_report=report,
         scale_events=scale_events,
+        assign_hist=hist,
     )

@@ -1,0 +1,116 @@
+"""Synthesize trace fixtures in the real formats core.traces reads.
+
+CI has no network, and the paper's Wikipedia/Twitter traces are not
+redistributable anyway — so benches and tests exercise the *ingestion path*
+(format parsing, raw-key hashing, count expansion, chunk packing) on
+fixtures this tool writes: same line formats, zipf-skewed key popularity,
+fully deterministic for a (events, keys, z, seed) tuple.
+
+Two formats, mirroring core.traces:
+
+* ``wikipedia``: ``project page_title count bytes`` lines; the per-line
+  count aggregates consecutive same-key events, so ``expand_counts=True``
+  reading recovers exactly ``events`` routed events.
+* ``kv``: ``key<TAB>timestamp`` lines, one event per line.
+
+Usage (CLI)::
+
+    python tools/make_trace.py --out /tmp/fixtures --events 100000 \
+        --keys 5000 --z 1.4 --seed 0 [--gzip]
+
+writes ``trace.wikipedia[.gz]`` and ``trace.kv[.gz]`` under --out and prints
+their paths.  Benches import ``write_trace_fixture`` directly.
+"""
+from __future__ import annotations
+
+import argparse
+import gzip
+import sys
+from pathlib import Path
+
+import numpy as np
+
+_SRC = Path(__file__).resolve().parent.parent / "src"
+if str(_SRC) not in sys.path:  # standalone runs without PYTHONPATH=src
+    sys.path.insert(0, str(_SRC))
+
+from repro.core.streams import zipf_probs  # noqa: E402
+
+__all__ = ["synth_events", "write_trace_fixture"]
+
+
+def synth_events(
+    n_events: int, n_keys: int = 5000, z: float = 1.4, seed: int = 0
+) -> np.ndarray:
+    """Deterministic zipf-skewed key-index sequence for the fixture."""
+    probs = zipf_probs(n_keys, z)
+    rng = np.random.default_rng(seed)
+    cdf = np.cumsum(probs)
+    cdf[-1] = 1.0
+    return np.searchsorted(cdf, rng.random(n_events), side="right").astype(np.int64)
+
+
+def _open_out(path: Path):
+    if path.suffix == ".gz":
+        return gzip.open(path, "wt", encoding="utf-8")
+    return open(path, "w", encoding="utf-8")
+
+
+def write_trace_fixture(
+    path,
+    fmt: str,
+    n_events: int,
+    n_keys: int = 5000,
+    z: float = 1.4,
+    seed: int = 0,
+) -> Path:
+    """Write a fixture at ``path`` holding exactly ``n_events`` events.
+
+    fmt="wikipedia": runs of consecutive equal keys collapse into one
+    ``en Page_<i> <run_len> <bytes>`` line (so count expansion is actually
+    exercised); fmt="kv": one ``word_<i>\\t<ts>`` line per event.  The event
+    sequence a core.traces reader yields from the file equals
+    ``synth_events(...)`` mapped through the format's key naming, in order.
+    """
+    path = Path(path)
+    idx = synth_events(n_events, n_keys=n_keys, z=z, seed=seed)
+    with _open_out(path) as f:
+        if fmt == "wikipedia":
+            # collapse consecutive-equal runs into counted lines
+            if len(idx):
+                bounds = np.flatnonzero(np.diff(idx)) + 1
+                starts = np.concatenate([[0], bounds])
+                ends = np.concatenate([bounds, [len(idx)]])
+                for s, e in zip(starts, ends):
+                    i, c = int(idx[s]), int(e - s)
+                    f.write(f"en Page_{i} {c} {c * 4096}\n")
+        elif fmt == "kv":
+            for t, i in enumerate(idx):
+                f.write(f"word_{int(i)}\t{t}\n")
+        else:
+            raise ValueError(f"unknown fixture format {fmt!r}")
+    return path
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", type=Path, default=Path("."), help="output dir")
+    ap.add_argument("--events", type=int, default=100_000)
+    ap.add_argument("--keys", type=int, default=5000)
+    ap.add_argument("--z", type=float, default=1.4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--gzip", action="store_true", help="write .gz files")
+    args = ap.parse_args(argv)
+    args.out.mkdir(parents=True, exist_ok=True)
+    ext = ".gz" if args.gzip else ""
+    for fmt in ("wikipedia", "kv"):
+        p = write_trace_fixture(
+            args.out / f"trace.{fmt}{ext}", fmt, args.events,
+            n_keys=args.keys, z=args.z, seed=args.seed,
+        )
+        print(p)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
